@@ -1,0 +1,24 @@
+"""Shared benchmark utilities — paper methodology: 1 warm-up + 5 timed
+runs, report the median (§IV)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def time_fn(fn, *args, n_runs: int = 5, warmup: int = 1, **kwargs):
+    """Median wall-time (seconds) of fn(*args) with block_until_ready."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kwargs))
+    times = []
+    for _ in range(n_runs):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kwargs))
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times))
+
+
+def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
+    return f"{name},{us_per_call:.1f},{derived}"

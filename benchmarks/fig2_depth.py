@@ -1,0 +1,34 @@
+"""Fig. 2 analogue: spanning-tree depth, BFS vs GConn(+Euler) vs PR-RST.
+
+Reproduces the depth–performance trade-off: connectivity-based methods
+produce (much) deeper trees; BFS trees are depth-minimal by construction.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.core import rooted_spanning_tree, tree_depth
+from repro.data.graphs import build_suite
+
+
+def run(suite=None) -> list[str]:
+    rows = []
+    suite = suite or build_suite()
+    for name, g in suite.items():
+        depths = {}
+        for method in ("bfs", "gconn_euler", "pr_rst"):
+            res = rooted_spanning_tree(g, 0, method=method)
+            parent = jnp.where(res.parent < 0,
+                               jnp.arange(g.n_nodes), res.parent)
+            depths[method] = int(tree_depth(parent))
+        rows.append(csv_row(
+            f"fig2/{name}", 0.0,
+            f"bfs={depths['bfs']};gconn={depths['gconn_euler']};"
+            f"prrst={depths['pr_rst']};"
+            f"ratio={depths['gconn_euler']/max(depths['bfs'],1):.1f}x"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

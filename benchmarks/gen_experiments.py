@@ -1,0 +1,54 @@
+"""Regenerate the auto tables in EXPERIMENTS.md from dry-run artifacts +
+benchmark runs. Manual narrative sections are kept; content between
+``<!-- AUTO:name -->`` and ``<!-- /AUTO:name -->`` markers is replaced.
+
+    PYTHONPATH=src python -m benchmarks.gen_experiments
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import re
+
+from benchmarks.roofline import load_rows, markdown_table
+
+
+def dryrun_table(mesh: str) -> str:
+    rows = []
+    for f in sorted(pathlib.Path("artifacts/dryrun").glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if not d.get("ok"):
+            rows.append(f"| {d['arch']} | {d['shape']} | FAILED | | | |")
+            continue
+        ma = d["memory_analysis"]
+        hp = d["hlo_parsed"]
+        rows.append(
+            f"| {d['arch']} | {d['shape']} | "
+            f"{d['timings_s']['compile']:.0f}s | "
+            f"{(ma.get('argument_size_in_bytes',0))/2**30:.2f} | "
+            f"{(ma.get('temp_size_in_bytes',0))/2**30:.2f} | "
+            f"{hp['collective_bytes']/2**30:.2f} |")
+    head = ("| arch | shape | compile | args GiB/chip | temp GiB/chip | "
+            "collective GiB/chip |\n|---|---|---|---|---|---|")
+    return head + "\n" + "\n".join(rows)
+
+
+def splice(text: str, name: str, content: str) -> str:
+    pat = re.compile(rf"(<!-- AUTO:{name} -->).*?(<!-- /AUTO:{name} -->)",
+                     re.S)
+    return pat.sub(lambda m: m.group(1) + "\n" + content + "\n" + m.group(2),
+                   text)
+
+
+def main() -> None:
+    p = pathlib.Path("EXPERIMENTS.md")
+    text = p.read_text()
+    text = splice(text, "dryrun_single", dryrun_table("16x16"))
+    text = splice(text, "dryrun_multi", dryrun_table("2x16x16"))
+    text = splice(text, "roofline", markdown_table())
+    p.write_text(text)
+    print("EXPERIMENTS.md tables regenerated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,117 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch × shape) on the single-pod 16×16 mesh:
+
+    T_compute    = flops_per_dev / PEAK_FLOPS
+    T_memory     = bytes_per_dev / HBM_BW
+    T_collective = collective_bytes_per_dev / LINK_BW
+
+flops/bytes/collective_bytes come from the trip-count-aware HLO parse
+(``repro.launch.hlo_analysis``) of the compiled per-device module. The
+dominant term is the bottleneck; MODEL_FLOPS = 6·N·D (dense) or
+6·N_active·D (MoE) gives the useful-compute ratio.
+
+Hardware constants (v5e-like, from the assignment): 197 TFLOP/s bf16,
+819 GB/s HBM, ~50 GB/s/link ICI.
+
+Methodology caveat (documented in EXPERIMENTS.md): the CPU-backend HLO
+upcasts bf16 dots to f32 and fuses differently than the TPU backend, so
+T_memory is an upper-bound proxy; relative movement across perf iterations
+is the signal, and FLOPs counts are exact.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+LINK_BW = 50e9               # bytes/s / link (conservative: 1 link)
+
+
+def model_flops(arch: str, shape: str) -> float | None:
+    """6·N·D (dense) / 6·N_active·D (MoE) per device — useful compute."""
+    from repro.configs import get_arch
+
+    spec = get_arch(arch)
+    sh = spec.shapes[shape]
+    if spec.family == "lm":
+        cfg = spec.make_config()
+        n = cfg.active_param_count()
+        if sh["kind"] == "train":
+            d = sh["batch"] * sh["seq"]
+            return 6.0 * n * d / 256
+        if sh["kind"] == "prefill":
+            d = sh["batch"] * sh["seq"]
+            return 2.0 * n * d / 256
+        # decode: one token per sequence
+        return 2.0 * n * sh["batch"] / 256
+    return None
+
+
+def load_rows(dryrun_dir="artifacts/dryrun", mesh="16x16"):
+    rows = []
+    for f in sorted(pathlib.Path(dryrun_dir).glob(f"*__{mesh}.json")):
+        d = json.loads(f.read_text())
+        if not d.get("ok"):
+            rows.append({"arch": d["arch"], "shape": d["shape"],
+                         "ok": False})
+            continue
+        hp = d["hlo_parsed"]
+        t_c = hp["flops"] / PEAK_FLOPS
+        t_m = hp["bytes_accessed"] / HBM_BW
+        t_x = hp["collective_bytes"] / LINK_BW
+        dom = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                  key=lambda kv: kv[1])
+        mf = model_flops(d["arch"], d["shape"])
+        rows.append({
+            "arch": d["arch"], "shape": d["shape"], "ok": True,
+            "t_compute": t_c, "t_memory": t_m, "t_collective": t_x,
+            "dominant": dom[0],
+            "bound_s": dom[1],
+            "model_flops": mf,
+            "useful_ratio": (mf / hp["flops"]) if mf else None,
+            "temp_gib": d["memory_analysis"].get("temp_size_in_bytes", 0) / 2**30,
+            "flops": hp["flops"], "bytes": hp["bytes_accessed"],
+            "coll": hp["collective_bytes"],
+            "per_collective": hp.get("per_collective", {}),
+        })
+    return rows
+
+
+def run(dryrun_dir="artifacts/dryrun") -> list[str]:
+    out = []
+    for r in load_rows(dryrun_dir):
+        if not r.get("ok"):
+            out.append(f"roofline/{r['arch']}/{r['shape']},0,FAILED")
+            continue
+        ur = f";useful={r['useful_ratio']:.2f}" if r["useful_ratio"] else ""
+        out.append(
+            f"roofline/{r['arch']}/{r['shape']},{r['bound_s']*1e6:.1f},"
+            f"dom={r['dominant']};tc={r['t_compute']*1e3:.2f}ms;"
+            f"tm={r['t_memory']*1e3:.2f}ms;tx={r['t_collective']*1e3:.2f}ms"
+            f"{ur};temp={r['temp_gib']:.1f}GiB")
+    return out
+
+
+def markdown_table(dryrun_dir="artifacts/dryrun", mesh="16x16") -> str:
+    rows = load_rows(dryrun_dir, mesh)
+    lines = [
+        "| arch | shape | T_comp (ms) | T_mem (ms) | T_coll (ms) | dominant "
+        "| useful | temp GiB |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | FAILED | — | — |")
+            continue
+        ur = f"{r['useful_ratio']:.2f}" if r["useful_ratio"] else "n/a"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['t_compute']*1e3:.2f} | "
+            f"{r['t_memory']*1e3:.2f} | {r['t_collective']*1e3:.2f} | "
+            f"**{r['dominant']}** | {ur} | {r['temp_gib']:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

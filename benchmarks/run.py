@@ -1,0 +1,63 @@
+"""Benchmark runner — one section per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  table2/*   graph statistics (Table II analogue)
+  fig1/*     runtime comparison BFS / PR-RST / GConn+Euler (Fig. 1)
+  fig2/*     spanning-tree depth comparison (Fig. 2)
+  table1/*   measured step counts vs theory (Table I)
+  kernels/*  Pallas kernel micro-benchmarks (interpret mode)
+  roofline/* dry-run roofline terms, if artifacts/dryrun exists (§Roofline)
+"""
+from __future__ import annotations
+
+import pathlib
+import sys
+
+
+def kernel_microbench() -> list[str]:
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import csv_row, time_fn
+    from repro.kernels.pointer_jump.ops import pointer_jump_k
+    from repro.kernels.list_rank.ops import list_rank_k
+    from repro.kernels.embed_bag.ops import embed_bag
+
+    rng = np.random.default_rng(0)
+    rows = []
+    n = 1 << 16
+    p = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+    rows.append(csv_row("kernels/pointer_jump_64k_x5",
+                        time_fn(pointer_jump_k, p) * 1e6))
+    succ = jnp.asarray(np.roll(np.arange(n), -1), jnp.int32).at[-1].set(-1)
+    d0 = jnp.ones(n, jnp.int32).at[-1].set(0)
+    rows.append(csv_row("kernels/list_rank_64k_x5",
+                        time_fn(list_rank_k, succ, d0) * 1e6))
+    idx = jnp.asarray(rng.integers(0, 10_000, (4096, 8)), jnp.int32)
+    tab = jnp.asarray(rng.standard_normal((10_000, 64)), jnp.float32)
+    rows.append(csv_row("kernels/embed_bag_4096x8x64",
+                        time_fn(embed_bag, idx, tab) * 1e6))
+    return rows
+
+
+def main() -> None:
+    from benchmarks import (ablation_hooking, fig1_runtime, fig2_depth,
+                            table1_steps, table2_stats)
+
+    rows: list[str] = []
+    print("name,us_per_call,derived")
+    for mod in (table2_stats, table1_steps, fig2_depth, fig1_runtime,
+                ablation_hooking):
+        for row in mod.run():
+            print(row)
+            sys.stdout.flush()
+    for row in kernel_microbench():
+        print(row)
+    if pathlib.Path("artifacts/dryrun").exists():
+        from benchmarks import roofline
+        for row in roofline.run():
+            print(row)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Table I analogue: measured parallel-step counts vs the theory table.
+
+BFS: Θ(diam) level steps. GConn: O(log V) hook/compress rounds.
+PR-RST: O(log V) hook/reverse rounds. The measured counts are the
+empirical side of the paper's complexity table.
+"""
+from __future__ import annotations
+
+import math
+
+from benchmarks.common import csv_row
+from repro.core import rooted_spanning_tree
+from repro.data.graphs import build_suite
+
+
+def run(suite=None) -> list[str]:
+    rows = []
+    suite = suite or build_suite()
+    for name, g in suite.items():
+        steps = {}
+        for method in ("bfs", "gconn_euler", "pr_rst"):
+            res = rooted_spanning_tree(g, 0, method=method)
+            steps[method] = int(res.steps)
+        logv = math.log2(max(g.n_nodes, 2))
+        rows.append(csv_row(
+            f"table1/{name}", 0.0,
+            f"bfs_steps={steps['bfs']};gconn_rounds={steps['gconn_euler']};"
+            f"prrst_rounds={steps['pr_rst']};log2V={logv:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

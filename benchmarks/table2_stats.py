@@ -1,0 +1,25 @@
+"""Table II analogue: graph statistics for the laptop-scale suite.
+
+Diameter is approximated by the depth of the BFS spanning tree from vertex
+0 — the same approximation the paper uses ("diameter is approximated by
+the depth of the BFS spanning tree").
+"""
+from __future__ import annotations
+
+from repro.core import bfs_rst
+from repro.data.graphs import SUITE, build_suite
+
+
+def run() -> list[str]:
+    rows = []
+    suite = build_suite()
+    for name, g in suite.items():
+        _, _, levels = bfs_rst(g, 0)
+        regime = SUITE[name][2]
+        rows.append(f"table2/{name},0,V={g.n_nodes};E={g.n_edges};"
+                    f"diam~{int(levels)};{regime}")
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

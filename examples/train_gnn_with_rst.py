@@ -1,0 +1,95 @@
+"""End-to-end driver: train a GNN whose data pipeline uses the paper's RST
+library for locality-aware node reordering, with fault-tolerant training.
+
+    PYTHONPATH=src python examples/train_gnn_with_rst.py --steps 200
+
+Pipeline: synthetic power-law graph → connectivity check (RST library) →
+RST-based node relabeling (gather locality) → GAT training with the
+fault-tolerant loop (checkpoint/resume every 50 steps).
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import Graph, connected_components
+from repro.data.gnn_batch import reorder_by_rst
+from repro.data.graphs import rmat
+from repro.models.gnn import GATConfig, GraphBatch, gat_forward, gat_init
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedule import cosine_schedule
+from repro.train.fault import FaultTolerantLoop
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--nodes", type=int, default=4096)
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt/gnn_rst_example")
+    args = ap.parse_args()
+
+    # --- data pipeline: graph → RST reorder -------------------------------
+    g = rmat(int(np.log2(args.nodes)), edge_factor=8, seed=0)
+    n = g.n_nodes
+    rep, _, rounds = connected_components(g)
+    n_comp = int(jnp.sum(rep == jnp.arange(n)))
+    print(f"graph: V={n} E={g.n_edges}; components={n_comp} "
+          f"(connectivity in {int(rounds)} rounds)")
+
+    perm = reorder_by_rst(np.asarray(g.src), np.asarray(g.dst), n)
+    src = jnp.asarray(perm[np.asarray(g.src)], jnp.int32)
+    dst = jnp.asarray(perm[np.asarray(g.dst)], jnp.int32)
+
+    rng = np.random.default_rng(0)
+    d_feat, n_classes = 64, 7
+    feats = jnp.asarray(rng.standard_normal((n, d_feat)), jnp.float32)
+    labels = jnp.asarray(rng.integers(0, n_classes, n), jnp.int32)
+    gb = GraphBatch(n_nodes=n, node_feat=feats, src=src, dst=dst)
+
+    # --- model + fault-tolerant training loop -----------------------------
+    cfg = GATConfig(d_in=d_feat, n_classes=n_classes, d_hidden=16, n_heads=4)
+    params = gat_init(cfg, jax.random.key(0))
+    state = {"params": params, "opt": adamw_init(params)}
+
+    @jax.jit
+    def step(state, batch):
+        def loss_fn(p):
+            logits = gat_forward(cfg, p, gb).astype(jnp.float32)
+            logz = jax.nn.logsumexp(logits, -1)
+            gold = jnp.take_along_axis(logits, labels[:, None], -1)[:, 0]
+            return jnp.mean(logz - gold)
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        lr = cosine_schedule(state["opt"]["step"], peak_lr=3e-3, warmup=20,
+                             total=args.steps)
+        p, opt, gn = adamw_update(grads, state["opt"], lr,
+                                  compute_dtype=jnp.float32)
+        return {"params": p, "opt": opt}, {"loss": loss, "grad_norm": gn}
+
+    def data():
+        c = 0
+        while True:
+            yield c, {}
+            c += 1
+
+    loop = FaultTolerantLoop(step_fn=step, state=state, data_iter=data(),
+                             ckpt_dir=args.ckpt_dir, ckpt_every=50)
+    start = loop.resume()
+    if start:
+        print(f"resumed from checkpoint at step {start}")
+
+    t0 = time.time()
+    losses = []
+    loop.run(args.steps, on_metrics=lambda s, m, dt: (
+        losses.append(float(m["loss"])),
+        print(f"step {s:4d}  loss {float(m['loss']):.4f}  {dt*1e3:.1f} ms")
+        if s % 25 == 0 else None))
+    print(f"\n{args.steps} steps in {time.time()-t0:.1f}s; "
+          f"loss {losses[0]:.3f} → {losses[-1]:.3f}; "
+          f"stragglers={len(loop.stragglers)}")
+    assert losses[-1] < losses[0], "training should reduce loss"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""Core library: the paper's rooted-spanning-tree primitives in JAX."""
+from repro.core.graph import Graph, build_csr
+from repro.core.bfs import bfs_rst
+from repro.core.connectivity import connected_components, pointer_jump_full
+from repro.core.euler import euler_tour_root, list_rank_dist_to_end
+from repro.core.pr_rst import pr_rst
+from repro.core.rst import (METHODS, RSTResult, gconn_euler_rst,
+                            rooted_spanning_tree, tree_depth)
+
+__all__ = [
+    "Graph", "build_csr", "bfs_rst", "connected_components",
+    "pointer_jump_full", "euler_tour_root", "list_rank_dist_to_end",
+    "pr_rst", "METHODS", "RSTResult", "gconn_euler_rst",
+    "rooted_spanning_tree", "tree_depth",
+]

@@ -1,0 +1,63 @@
+"""Downstream tree analytics on rooted spanning trees.
+
+The paper motivates RSTs as the substrate for biconnectivity, ear
+decomposition, etc. This module provides the two classic Euler-tour /
+pointer-doubling consumers, built on the same primitives:
+
+  * ``subtree_sizes(parent)`` — |subtree(v)| for every v, via pointer
+    doubling with additive payload (the Tarjan–Vishkin building block for
+    low/high computation in biconnectivity);
+  * ``depths(parent)`` — exact depth of every vertex (not just the max).
+
+Both are O(log n) parallel depth, jit-compatible, fixed-shape.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def depths(parent: jnp.ndarray) -> jnp.ndarray:
+    """int32[n] depth of each vertex (roots = 0). Pointer doubling."""
+    n = parent.shape[0]
+    d = jnp.where(parent == jnp.arange(n, dtype=parent.dtype), 0, 1)
+    d = d.astype(jnp.int32)
+    hop = parent
+
+    def body(state):
+        d, hop, _ = state
+        nd = d + d[hop]
+        nh = hop[hop]
+        return nd, nh, jnp.any(nh != hop)
+
+    d, _, _ = jax.lax.while_loop(lambda s: s[2], body,
+                                 (d, hop, jnp.bool_(True)))
+    return d
+
+
+def subtree_sizes(parent: jnp.ndarray) -> jnp.ndarray:
+    """int32[n]: number of vertices in v's subtree (incl. v).
+
+    Level-synchronous bottom-up aggregation driven by depths: vertices are
+    processed from the deepest level upward; each level is one masked
+    scatter-add into the parents. O(depth) steps like BFS — the
+    depth-performance trade-off the paper measures (Fig. 2) applies to
+    downstream consumers too, which is why we report tree depth per
+    method in fig2_depth.
+    """
+    n = parent.shape[0]
+    dep = depths(parent)
+    max_d = jnp.max(dep)
+    sizes = jnp.ones((n,), jnp.int32)
+    verts = jnp.arange(n, dtype=parent.dtype)
+    is_root = parent == verts
+
+    def body(state):
+        level, sizes = state
+        at = (dep == level) & ~is_root
+        tgt = jnp.where(at, parent, n)
+        sizes = sizes.at[tgt].add(jnp.where(at, sizes, 0), mode="drop")
+        return level - 1, sizes
+
+    _, sizes = jax.lax.while_loop(lambda s: s[0] > 0, body, (max_d, sizes))
+    return sizes

@@ -1,0 +1,82 @@
+"""Edge-centric BFS rooted spanning tree (the paper's baseline, §III-A).
+
+TPU adaptation of Merrill et al.'s edge-centric BFS: instead of warp-level
+frontier queues we relax *all* half-edges each level with dense vector ops —
+gather both endpoint distances, propose ``parent[dst] = src`` for edges whose
+src is on the current frontier and whose dst is undiscovered, and resolve
+write conflicts with a deterministic scatter-min. A ``lax.while_loop`` runs
+one iteration per BFS level, reproducing the Θ(diam(G)) step complexity the
+paper measures.
+
+Returns (parent, dist, levels): ``parent[root] == root``; unreachable
+vertices keep ``parent == -1`` and ``dist == INF32``.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph
+
+INF32 = jnp.iinfo(jnp.int32).max
+
+
+@partial(jax.jit, static_argnames=("max_levels", "use_kernel"))
+def bfs_rst(graph: Graph, root, *, max_levels: int | None = None,
+            use_kernel: bool = False):
+    """Level-synchronous edge-centric BFS spanning tree.
+
+    Args:
+      graph: Graph (paired half-edges).
+      root: scalar int vertex id.
+      max_levels: optional static bound on levels (defaults to n_nodes).
+      use_kernel: route the per-level edge relaxation through the Pallas
+        ``frontier_relax`` kernel (interpret mode on CPU).
+
+    Returns:
+      parent: int32[n] parent array (-1 = unreachable, parent[root] = root).
+      dist:   int32[n] hop distance (INF32 = unreachable).
+      levels: int32 scalar, number of BFS levels executed (= tree depth).
+    """
+    n = graph.n_nodes
+    src, dst = graph.src, graph.dst
+    root = jnp.asarray(root, jnp.int32)
+
+    dist0 = jnp.full((n,), INF32, jnp.int32).at[root].set(0)
+    parent0 = jnp.full((n,), -1, jnp.int32).at[root].set(root)
+
+    if use_kernel:
+        from repro.kernels.frontier_relax.ops import frontier_relax
+    else:
+        frontier_relax = None
+
+    def relax(dist, level):
+        """One edge-centric relaxation: returns per-edge (proposes, src)."""
+        if frontier_relax is not None:
+            return frontier_relax(dist, src, dst, level)
+        d_src = dist[src]
+        d_dst = dist[dst]
+        active = (d_src == level) & (d_dst == INF32)
+        return active
+
+    def body(state):
+        dist, parent, level, _changed = state
+        active = relax(dist, level)
+        # Deterministic conflict resolution: the minimum src id wins each dst.
+        prop_parent = jnp.where(active, src, INF32)
+        winner = jnp.full((n,), INF32, jnp.int32).at[dst].min(prop_parent)
+        discovered = winner != INF32
+        parent = jnp.where(discovered, winner, parent)
+        dist = jnp.where(discovered, level + 1, dist)
+        return dist, parent, level + 1, jnp.any(discovered)
+
+    def cond(state):
+        _dist, _parent, level, changed = state
+        bound = n if max_levels is None else max_levels
+        return changed & (level < bound)
+
+    dist, parent, levels, _ = jax.lax.while_loop(
+        cond, body, (dist0, parent0, jnp.int32(0), jnp.bool_(True)))
+    return parent, dist, levels - 1

@@ -1,0 +1,128 @@
+"""Shiloach–Vishkin / GConn-style connectivity with spanning-forest extraction.
+
+Implements the paper's §III-B: alternating *hooking* and *pointer jumping*
+(shortcutting). Per Shiloach & Vishkin (1982), the union phase marks one
+*spanning edge* per successful hook, so connectivity yields an (unrooted)
+spanning forest for free. Rooting is done separately by the Euler tour
+(``repro.core.euler``), mirroring the paper's GConn + Euler pipeline.
+
+TPU adaptation (see DESIGN.md §2):
+  * CUDA ``atomicMin`` hooking → deterministic ``.at[].min`` scatter.
+  * Winner-edge selection is two-stage so it stays int32-exact: first
+    scatter-min the candidate representative per hook target, then
+    scatter-min the half-edge id among edges that achieved that rep.
+  * Hooking is pure-min by default: the paper's min/max alternation (a
+    CAS-era optimization) pathologically funnels to one hook per round on
+    hub graphs under deterministic scatter-hooking (measured: 812 vs 3
+    rounds on rmat-13; see EXPERIMENTS.md §Perf). ``alternate_hooking=True``
+    keeps the paper-faithful variant for ablation. Each round hooks *roots
+    only*, monotonically, so no cycles can form within a round.
+  * Pointer jumping runs to full convergence between hooking rounds and can
+    be routed through the multi-jump Pallas kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import Graph
+
+INF32 = jnp.iinfo(jnp.int32).max
+
+
+def pointer_jump_full(p: jnp.ndarray, *, use_kernel: bool = False) -> jnp.ndarray:
+    """Jump ``p[i] = p[p[i]]`` until convergence (full path compression)."""
+    if use_kernel:
+        from repro.kernels.pointer_jump.ops import pointer_jump_until_converged
+        return pointer_jump_until_converged(p)
+
+    def body(state):
+        p, _ = state
+        p2 = p[p]
+        return p2, jnp.any(p2 != p)
+
+    p, _ = jax.lax.while_loop(lambda s: s[1], body, (p, jnp.bool_(True)))
+    return p
+
+
+@partial(jax.jit, static_argnames=("max_rounds", "use_kernel", "alternate_hooking"))
+def connected_components(graph: Graph, *, max_rounds: int | None = None,
+                         use_kernel: bool = False,
+                         alternate_hooking: bool = False):
+    """Connectivity + spanning forest via alternating hook / compress rounds.
+
+    Returns:
+      rep:         int32[n] component representative per vertex (a root id).
+      forest_mask: bool[2M] — True for half-edges selected as spanning-forest
+                   edges (at most one direction of an undirected edge is set;
+                   exactly n - n_components are set in total).
+      rounds:      int32 scalar — hook/compress rounds executed (the paper's
+                   O(log n) step count).
+    """
+    n = graph.n_nodes
+    src, dst = graph.src, graph.dst
+    m2 = src.shape[0]
+    edge_id = jnp.arange(m2, dtype=jnp.int32)
+
+    p0 = jnp.arange(n, dtype=jnp.int32)
+    forest0 = jnp.zeros((m2,), jnp.bool_)
+
+    def body(state):
+        p, forest, rnd, _ = state
+        ru = p[src]
+        rv = p[dst]
+        cross = ru != rv
+
+        # Hooking direction. The paper alternates min/max per round (an
+        # optimization for CAS-based hooking); under DETERMINISTIC
+        # scatter-hooking the alternation re-creates a single-hook funnel
+        # whenever the merged component's root is the extreme id of every
+        # cross edge (hub graphs: measured 812 rounds vs 3 on rmat-13) —
+        # pure min-hooking flips the funnel into a broadcast every other
+        # round instead. Default: pure-min; the paper-faithful alternation
+        # stays available for the ablation benchmark.
+        use_min = ((rnd % 2) == 0) if alternate_hooking else jnp.bool_(True)
+        lo = jnp.minimum(ru, rv)
+        hi = jnp.maximum(ru, rv)
+        tgt = jnp.where(use_min, hi, lo)     # root being re-pointed
+        val = jnp.where(use_min, lo, hi)     # new parent for that root
+
+        # Stage 1: deterministic scatter (min- or max-hooking).
+        prop = jnp.where(cross, val, jnp.where(use_min, INF32, -1))
+        hooked_min = jnp.full((n,), INF32, jnp.int32).at[tgt].min(
+            jnp.where(cross, val, INF32))
+        hooked_max = jnp.full((n,), -1, jnp.int32).at[tgt].max(
+            jnp.where(cross, val, -1))
+        new_parent = jnp.where(use_min, hooked_min, hooked_max)
+        got_hook = jnp.where(use_min, new_parent != INF32, new_parent >= 0)
+        p_next = jnp.where(got_hook, new_parent, p)
+
+        # Stage 2: winner half-edge per successful hook → spanning edge.
+        achieved = cross & (new_parent[tgt] == val)
+        win_eid = jnp.full((n,), INF32, jnp.int32).at[tgt].min(
+            jnp.where(achieved, edge_id, INF32))
+        is_winner = achieved & (win_eid[tgt] == edge_id)
+        forest = forest | is_winner
+
+        # Compress to full convergence before the next round.
+        p_next = pointer_jump_full(p_next, use_kernel=use_kernel)
+        changed = jnp.any(got_hook)
+        return p_next, forest, rnd + 1, changed
+
+    def cond(state):
+        _p, _f, rnd, changed = state
+        bound = n if max_rounds is None else max_rounds
+        return changed & (rnd < bound)
+
+    p, forest, rounds, _ = jax.lax.while_loop(
+        cond, body, (p0, forest0, jnp.int32(0), jnp.bool_(True)))
+    return p, forest, rounds - 1
+
+
+def count_components(rep: jnp.ndarray) -> jnp.ndarray:
+    """Number of distinct representatives (components), jit-friendly."""
+    n = rep.shape[0]
+    is_root = rep == jnp.arange(n, dtype=rep.dtype)
+    return jnp.sum(is_root.astype(jnp.int32))

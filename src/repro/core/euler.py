@@ -1,0 +1,142 @@
+"""Euler-tour rooting of a spanning forest (paper §III-D).
+
+Given an (unrooted) spanning forest as an edge list, orient every edge toward
+a designated root per component in O(log n) parallel depth:
+
+  1. materialize both directions of every forest edge with the pairing
+     ``rev(e) = (e + T) % 2T``;
+  2. lexicographically sort directed edges by (from, to) — the XLA-sort
+     replacement for the paper's CUB radix sort — inducing a deterministic
+     circular adjacency ordering with ``first[v]`` / ``next[e]`` implicit in
+     the sorted permutation;
+  3. compute the Euler successor
+        succ(e) = next(rev(e))            if it exists,
+                  first(from(rev(e)))     otherwise (wrap-around);
+  4. break each component's Euler *cycle* into a linear list at that
+     component's root (cut the reverse of the root's last outgoing edge —
+     the generalization to disconnected forests from the paper);
+  5. Wyllie pointer-doubling list ranking (multi-jump Pallas kernel
+     optional) — we keep ``d[e] =`` #edges *after* e, which is enough to
+     order e against rev(e) without per-tree totals;
+  6. the earlier-traversed direction of each edge is the discovery edge
+     (x → y) ⇒ ``parent[y] = x``.
+
+All shapes are static: the forest is padded to ``n - 1`` slots with
+``from = n`` sentinels which sort to the tail and stay inert.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NO_SUCC = jnp.int32(-1)
+
+
+def _lexsort_edges(frm: jnp.ndarray, to: jnp.ndarray) -> jnp.ndarray:
+    """Sort directed edges by (from, to); returns permutation ``ord``."""
+    return jnp.lexsort((to, frm)).astype(jnp.int32)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def list_rank_dist_to_end(succ: jnp.ndarray, valid: jnp.ndarray,
+                          *, use_kernel: bool = False) -> jnp.ndarray:
+    """Wyllie list ranking: d[e] = number of list elements after e."""
+    if use_kernel:
+        from repro.kernels.list_rank.ops import list_rank
+        return list_rank(succ, valid)
+
+    d0 = jnp.where(valid & (succ != NO_SUCC), 1, 0).astype(jnp.int32)
+
+    def body(state):
+        d, s = state
+        has = s != NO_SUCC
+        safe = jnp.where(has, s, 0)
+        d = jnp.where(has, d + d[safe], d)
+        s = jnp.where(has, s[safe], s)
+        return d, s
+
+    def cond(state):
+        _d, s = state
+        return jnp.any(s != NO_SUCC)
+
+    d, _ = jax.lax.while_loop(cond, body, (d0, succ))
+    return d
+
+
+@partial(jax.jit, static_argnums=(0,))
+def euler_tour_root(n_nodes: int, fu: jnp.ndarray, fv: jnp.ndarray,
+                    valid: jnp.ndarray, comp_root: jnp.ndarray):
+    """Root a spanning forest by Euler tour.
+
+    Args:
+      n_nodes: number of vertices n (static via shapes).
+      fu, fv: int32[T] forest edge endpoints (T slots, typically n-1);
+              padding slots must carry ``fu == fv == n_nodes``.
+      valid: bool[T] slot validity.
+      comp_root: int32[n] — the vertex every component should be rooted at
+              (constant within a component; ``comp_root[v] == v`` iff v is
+              that component's root).
+
+    Returns:
+      parent: int32[n]; ``parent[root] == root`` per component, every other
+              vertex in a non-trivial component points at its tree parent;
+              isolated vertices point at themselves.
+    """
+    n = n_nodes
+    t = fu.shape[0]
+    sentinel = jnp.int32(n)
+
+    fu = jnp.where(valid, fu, sentinel)
+    fv = jnp.where(valid, fv, sentinel)
+
+    # Both directions; rev(e) = (e + t) % 2t.
+    frm = jnp.concatenate([fu, fv])
+    to = jnp.concatenate([fv, fu])
+    m2 = 2 * t
+    eid = jnp.arange(m2, dtype=jnp.int32)
+    rev = (eid + t) % m2
+    dvalid = jnp.concatenate([valid, valid])
+
+    # Sorted circular adjacency ordering (first/next are implicit).
+    order = _lexsort_edges(frm, to)
+    ipos = jnp.zeros((m2,), jnp.int32).at[order].set(eid)
+    sfrom = frm[order]
+    first_pos = jnp.searchsorted(sfrom, jnp.arange(n + 1, dtype=jnp.int32),
+                                 side="left").astype(jnp.int32)
+    last_pos = jnp.searchsorted(sfrom, jnp.arange(n + 1, dtype=jnp.int32),
+                                side="right").astype(jnp.int32) - 1
+
+    # succ(e) = next(rev(e)) or wrap to first(from(rev(e))).
+    p = ipos[rev]
+    p_next = jnp.minimum(p + 1, m2 - 1)
+    has_next = (p + 1 < m2) & (sfrom[p_next] == sfrom[p])
+    wrap = order[first_pos[jnp.clip(sfrom[p], 0, n)]]
+    succ = jnp.where(has_next, order[p_next], wrap)
+    succ = jnp.where(dvalid, succ, NO_SUCC)
+
+    # Break each component's cycle at its root: cut rev(last-out-edge(root)).
+    verts = jnp.arange(n, dtype=jnp.int32)
+    is_root = comp_root == verts
+    has_out = last_pos[:-1] >= first_pos[:-1]
+    do_cut = is_root & has_out
+    last_edge = order[jnp.clip(last_pos[:-1], 0, m2 - 1)]
+    cut_edge = rev[last_edge]
+    cut_idx = jnp.where(do_cut, cut_edge, m2)  # m2 → dropped
+    succ = succ.at[cut_idx].set(NO_SUCC, mode="drop")
+
+    # Rank; earlier-traversed direction has the larger distance-to-end.
+    d = list_rank_dist_to_end(succ, dvalid)
+
+    # Discovery edge (x → y) ⇒ parent[y] = x.
+    de = d[:t]
+    dr = d[t:]
+    disc_u_to_v = de > dr          # (u→v) earlier ⇒ parent[v] = u
+    child = jnp.where(disc_u_to_v, fv, fu)
+    par = jnp.where(disc_u_to_v, fu, fv)
+    child = jnp.where(valid, child, sentinel)
+
+    parent = jnp.arange(n, dtype=jnp.int32)
+    parent = parent.at[child].set(par, mode="drop")
+    return parent

@@ -1,0 +1,102 @@
+"""Unified rooted-spanning-tree API — the paper's three strategies.
+
+``rooted_spanning_tree(graph, root, method=...)`` returns a parent array plus
+per-method diagnostics (the step counts the paper's analysis revolves
+around). All methods are jit-compiled with fixed shapes.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax.numpy as jnp
+
+from repro.core.bfs import bfs_rst as _bfs_rst
+from repro.core.connectivity import connected_components as _connected_components
+from repro.core.euler import euler_tour_root as _euler_tour_root
+from repro.core.pr_rst import pr_rst as _pr_rst
+from repro.core.graph import Graph
+
+Method = Literal["bfs", "gconn_euler", "pr_rst"]
+METHODS: tuple[str, ...] = ("bfs", "gconn_euler", "pr_rst")
+
+
+import jax
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class RSTResult:
+    parent: jnp.ndarray          # int32[n]
+    method: str                  # static
+    steps: jnp.ndarray           # parallel step count (levels or rounds)
+    dist: jnp.ndarray | None = None      # BFS only: hop distances
+    rep: jnp.ndarray | None = None       # gconn only: component reps
+
+    def tree_flatten(self):
+        return (self.parent, self.steps, self.dist, self.rep), self.method
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        parent, steps, dist, rep = children
+        return cls(parent=parent, method=aux, steps=steps, dist=dist,
+                   rep=rep)
+
+
+def gconn_euler_rst(graph: Graph, root):
+    """Paper's winning pipeline: connectivity → spanning forest → Euler rooting."""
+    n = graph.n_nodes
+    rep, forest_mask, rounds = _connected_components(graph)
+
+    # Compact marked half-edges into n-1 fixed slots.
+    t = max(n - 1, 1)
+    slots = jnp.nonzero(forest_mask, size=t, fill_value=graph.src.shape[0])[0]
+    in_range = slots < graph.src.shape[0]
+    fu = jnp.where(in_range, graph.src[jnp.clip(slots, 0, graph.src.shape[0] - 1)], n)
+    fv = jnp.where(in_range, graph.dst[jnp.clip(slots, 0, graph.src.shape[0] - 1)], n)
+    valid = in_range
+
+    # Component containing ``root`` is rooted at ``root``; others at their rep.
+    root = jnp.asarray(root, jnp.int32)
+    comp_root = jnp.where(rep == rep[root], root, rep)
+
+    parent = _euler_tour_root(n, fu, fv, valid, comp_root)
+    return parent, rep, rounds
+
+
+def rooted_spanning_tree(graph: Graph, root, method: Method = "gconn_euler",
+                         **kwargs) -> RSTResult:
+    if method == "bfs":
+        parent, dist, levels = _bfs_rst(graph, root, **kwargs)
+        return RSTResult(parent=parent, method=method, steps=levels, dist=dist)
+    if method == "gconn_euler":
+        parent, rep, rounds = gconn_euler_rst(graph, root)
+        return RSTResult(parent=parent, method=method, steps=rounds, rep=rep)
+    if method == "pr_rst":
+        parent, rounds = _pr_rst(graph, root, **kwargs)
+        return RSTResult(parent=parent, method=method, steps=rounds)
+    raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
+
+
+def tree_depth(parent: jnp.ndarray) -> jnp.ndarray:
+    """Max depth of the rooted forest (pointer-doubling, O(log n) steps).
+
+    Invariant: ``depth[v]`` = #edges from v to ``hop[v]``; roots carry
+    depth 0 and ``hop = self``, so ``depth + depth[hop]`` is exact.
+    """
+    import jax.lax as lax
+
+    n = parent.shape[0]
+    depth = jnp.where(parent == jnp.arange(n, dtype=parent.dtype), 0, 1)
+    depth = depth.astype(jnp.int32)
+    hop = parent
+
+    def body(state):
+        depth, hop, _ = state
+        nd = depth + depth[hop]
+        nh = hop[hop]
+        return nd, nh, jnp.any(nh != hop)
+
+    depth, hop, _ = lax.while_loop(lambda s: s[2], body,
+                                   (depth, hop, jnp.bool_(True)))
+    return jnp.max(depth)

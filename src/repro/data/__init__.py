@@ -1,0 +1,1 @@
+"""Data pipelines: synthetic graph suite, neighbor sampler, token streams."""

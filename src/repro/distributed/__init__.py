@@ -1,0 +1,1 @@
+"""Distribution layer: mesh construction, per-family sharding rules."""

@@ -1,0 +1,188 @@
+"""Sharding rules per architecture family.
+
+Axes: ``data`` = DP/FSDP (+ sequence parallel for long-context decode),
+``model`` = TP (heads / d_ff / vocab) + EP (experts), ``pod`` = cross-pod
+pure data parallelism (batch; gradient all-reduce crosses pods once/step).
+
+Rules return pytrees of ``PartitionSpec`` matching the param/state trees.
+Dense LMs use DP+TP (params replicated over data); MoE LMs use FSDP×TP/EP
+(params sharded over BOTH axes — dbrx at 132 B params must, see DESIGN.md
+§7); GNNs shard nodes/edges over data with replicated (small) params;
+DIEN shards embedding-table rows over model and batch over data.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Batch axes: ('pod', 'data') on the multi-pod mesh, else ('data',)."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def ns(mesh: Mesh, *spec) -> NamedSharding:
+    return NamedSharding(mesh, P(*spec))
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+def lm_param_specs(cfg, mesh: Mesh, *, fsdp: bool) -> dict:
+    """PartitionSpec tree matching ``transformer.init_params``."""
+    dp = "data" if fsdp else None
+    layer = {
+        "wq": P(None, dp, "model"),
+        "wk": P(None, dp, "model"),
+        "wv": P(None, dp, "model"),
+        "wo": P(None, "model", dp),
+        "ln_attn": P(None, None),
+        "ln_mlp": P(None, None),
+    }
+    if cfg.qk_norm:
+        layer["q_norm"] = P(None, None)
+        layer["k_norm"] = P(None, None)
+    if cfg.is_moe:
+        layer["router"] = P(None, None, None)
+        layer["w_gate"] = P(None, "model", dp, None)
+        layer["w_up"] = P(None, "model", dp, None)
+        layer["w_down"] = P(None, "model", None, dp)
+    else:
+        layer["w_gate"] = P(None, dp, "model")
+        layer["w_up"] = P(None, dp, "model")
+        layer["w_down"] = P(None, "model", dp)
+    specs = {
+        "embed": P("model", dp),
+        "layers": layer,
+        "ln_out": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(dp, "model")
+    return specs
+
+
+def lm_input_specs(mesh: Mesh, batch: int, seq: int):
+    da = data_axes(mesh)
+    return {
+        "tokens": jax.ShapeDtypeStruct((batch, seq), jnp.int32,
+                                       sharding=ns(mesh, da, None)),
+        "targets": jax.ShapeDtypeStruct((batch, seq), jnp.int32,
+                                        sharding=ns(mesh, da, None)),
+    }
+
+
+def lm_cache_specs(cfg, mesh: Mesh, batch: int, seq: int):
+    """KV-cache shardings: batch over data when batch ≥ |data|; otherwise
+    sequence parallelism (long_500k: one request, cache sharded on seq)."""
+    da = data_axes(mesh)
+    n_data = 1
+    for a in da:
+        n_data *= mesh.shape[a]
+    if batch >= n_data:
+        spec = P(None, da, "model", None, None)     # seq over model (TP)
+    else:
+        spec = P(None, None, da, None, None)        # sequence parallel
+    shape = (cfg.n_layers, batch, seq, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, cfg.dtype, sharding=ns(mesh, *spec)),
+        "v": jax.ShapeDtypeStruct(shape, cfg.dtype, sharding=ns(mesh, *spec)),
+        "len": jax.ShapeDtypeStruct((), jnp.int32, sharding=ns(mesh)),
+    }, {
+        "token": jax.ShapeDtypeStruct(
+            (batch,), jnp.int32,
+            sharding=ns(mesh, da if batch >= n_data else None)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# GNN family — nodes/edges sharded over data, params replicated
+# ---------------------------------------------------------------------------
+
+def gnn_param_specs(params) -> dict:
+    return jax.tree.map(lambda _: P(), params)
+
+
+def gnn_input_specs(mesh: Mesh, *, n_nodes: int, n_edges: int, d_feat: int,
+                    positions: bool = False, atom_types: bool = False,
+                    n_graphs: int = 1, n_triplets: int = 0):
+    da = data_axes(mesh)
+    node_sh = ns(mesh, da)
+    edge_sh = ns(mesh, da)
+    if atom_types:
+        nf = jax.ShapeDtypeStruct((n_nodes,), jnp.int32, sharding=node_sh)
+    else:
+        nf = jax.ShapeDtypeStruct((n_nodes, d_feat), jnp.float32,
+                                  sharding=ns(mesh, da, None))
+    out = {
+        "node_feat": nf,
+        "src": jax.ShapeDtypeStruct((n_edges,), jnp.int32, sharding=edge_sh),
+        "dst": jax.ShapeDtypeStruct((n_edges,), jnp.int32, sharding=edge_sh),
+        "graph_id": jax.ShapeDtypeStruct((n_nodes,), jnp.int32,
+                                         sharding=node_sh),
+    }
+    if positions:
+        out["positions"] = jax.ShapeDtypeStruct((n_nodes, 3), jnp.float32,
+                                                sharding=ns(mesh, da, None))
+    if n_triplets:
+        out["trip_in"] = jax.ShapeDtypeStruct((n_triplets,), jnp.int32,
+                                              sharding=edge_sh)
+        out["trip_out"] = jax.ShapeDtypeStruct((n_triplets,), jnp.int32,
+                                               sharding=edge_sh)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# RecSys family — table rows over model, batch over data
+# ---------------------------------------------------------------------------
+
+def dien_param_specs(params, *, replicate_tables: bool = False) -> dict:
+    """Tables row-shard over `model` for training (grad scatter locality,
+    and the layout that scales to 10^8–10^9-row tables). For SERVING the
+    assigned tables are ~72 MB total — replicating them removes the
+    cross-shard gather fallbacks entirely (§Perf P5: serve_bulk collective
+    2.9e11 → ~0 B/chip). Policy knob: replicate when table bytes < 1 GiB."""
+    specs = jax.tree.map(lambda _: P(), params)
+    if not replicate_tables:
+        specs["item_table"] = P("model", None)
+        specs["cate_table"] = P("model", None)
+        specs["user_table"] = P("model", None)
+    return specs
+
+
+def dien_input_specs(mesh: Mesh, cfg, batch: int):
+    da = data_axes(mesh)
+    b = ns(mesh, da)
+    bt = ns(mesh, da, None)
+    t = cfg.seq_len
+    return {
+        "hist_items": jax.ShapeDtypeStruct((batch, t), jnp.int32, sharding=bt),
+        "hist_cates": jax.ShapeDtypeStruct((batch, t), jnp.int32, sharding=bt),
+        "hist_mask": jax.ShapeDtypeStruct((batch, t), jnp.bool_, sharding=bt),
+        "target_item": jax.ShapeDtypeStruct((batch,), jnp.int32, sharding=b),
+        "target_cate": jax.ShapeDtypeStruct((batch,), jnp.int32, sharding=b),
+        "user_feats": jax.ShapeDtypeStruct((batch, cfg.user_hot), jnp.int32,
+                                           sharding=bt),
+        "label": jax.ShapeDtypeStruct((batch,), jnp.int32, sharding=b),
+    }
+
+
+def dien_retrieval_specs(mesh: Mesh, cfg, n_candidates: int):
+    da = data_axes(mesh)
+    rep = ns(mesh)
+    rep2 = ns(mesh, None, None)
+    return {
+        "hist_items": jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32,
+                                           sharding=rep2),
+        "hist_cates": jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.int32,
+                                           sharding=rep2),
+        "hist_mask": jax.ShapeDtypeStruct((1, cfg.seq_len), jnp.bool_,
+                                          sharding=rep2),
+        "user_feats": jax.ShapeDtypeStruct((1, cfg.user_hot), jnp.int32,
+                                           sharding=rep2),
+        "cand_items": jax.ShapeDtypeStruct((n_candidates,), jnp.int32,
+                                           sharding=ns(mesh, da)),
+        "cand_cates": jax.ShapeDtypeStruct((n_candidates,), jnp.int32,
+                                           sharding=ns(mesh, da)),
+    }

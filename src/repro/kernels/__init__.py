@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the paper's compute hot spots.
+
+Each kernel lives in its own subpackage with three modules:
+  <name>.py — the ``pl.pallas_call`` body with explicit BlockSpec tiling;
+  ops.py    — the jit'd public wrapper (padding, grid, interpret switch);
+  ref.py    — the pure-jnp oracle used by the allclose test sweeps.
+
+Kernels (all validated in interpret mode on CPU; TPU is the target):
+  pointer_jump   k-step pointer doubling with the parent table VMEM-resident
+                 (the paper's "five jumps between global syncs", restated for
+                 the HBM→VMEM hierarchy).
+  list_rank      Wyllie list-ranking step: pointer doubling + additive payload.
+  hook_edges     edge-centric hooking scan: gather both endpoint reps, emit
+                 cross-edge hook proposals (min/max alternation).
+  frontier_relax BFS edge relaxation: frontier/undiscovered tests per edge.
+  embed_bag      gather + segment-reduce (recsys embedding bag, GNN message
+                 aggregation substrate).
+"""

@@ -1,0 +1,72 @@
+"""jit'd wrapper for the embed_bag kernel (padding, weights, custom VJP).
+
+The Pallas forward gets a hand-written VJP (gathers/scatter-adds in XLA):
+  d table[idx[b,h]] += ŵ[b,h] · g[b]        (ŵ = w, or w/Σw for mean)
+  d w[b,h]          = g[b] · (r[b,h] − mean·[out])/denom   (mean case)
+                    = g[b] · r[b,h]                         (sum case)
+so the kernel is trainable end-to-end (DIEN path).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.embed_bag.embed_bag import (BAG_BLOCK, D_TILE,
+                                               embed_bag_pallas)
+
+
+def _fwd_kernel(idx, table, weights, mean: bool, interpret: bool):
+    b, hot = idx.shape
+    v, d = table.shape
+    b_pad = -b % BAG_BLOCK
+    d_pad = -d % D_TILE
+    idx_p = jnp.pad(idx, ((0, b_pad), (0, 0)))
+    w_p = jnp.pad(weights, ((0, b_pad), (0, 0)))
+    table_p = jnp.pad(table, ((0, 0), (0, d_pad)))
+    out = embed_bag_pallas(idx_p, w_p, table_p, mean=mean,
+                           interpret=interpret)
+    return out[:b, :d]
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _embed_bag(idx, table, weights, mean: bool, interpret: bool):
+    return _fwd_kernel(idx, table, weights, mean, interpret)
+
+
+def _vjp_fwd(idx, table, weights, mean, interpret):
+    out = _fwd_kernel(idx, table, weights, mean, interpret)
+    return out, (idx, table, weights, out)
+
+
+def _vjp_bwd(mean, interpret, res, g):
+    idx, table, weights, out = res
+    b, hot = idx.shape
+    rows = table[idx]                                  # [B, hot, D]
+    if mean:
+        denom = jnp.maximum(weights.sum(-1, keepdims=True), 1e-9)  # [B,1]
+        w_eff = weights / denom
+        d_w = jnp.einsum("bd,bhd->bh", g, rows) / denom \
+            - jnp.einsum("bd,bd->b", g, out)[:, None] / denom
+        d_rows = w_eff[..., None] * g[:, None, :]
+    else:
+        d_w = jnp.einsum("bd,bhd->bh", g, rows)
+        d_rows = weights[..., None] * g[:, None, :]
+    d_table = jnp.zeros_like(table).at[idx.reshape(-1)].add(
+        d_rows.reshape(-1, table.shape[1]).astype(table.dtype))
+    return None, d_table, d_w.astype(weights.dtype)
+
+
+_embed_bag.defvjp(_vjp_fwd, _vjp_bwd)
+
+
+@partial(jax.jit, static_argnames=("mean", "interpret"))
+def embed_bag(idx: jnp.ndarray, table: jnp.ndarray,
+              weights: jnp.ndarray | None = None, *, mean: bool = False,
+              interpret: bool = True) -> jnp.ndarray:
+    """EmbeddingBag: out[b] = Σ_h w[b,h] · table[idx[b,h]] (or mean)."""
+    b, hot = idx.shape
+    if weights is None:
+        weights = jnp.ones((b, hot), jnp.float32)
+    return _embed_bag(idx, table, weights, mean, interpret)

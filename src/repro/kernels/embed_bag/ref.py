@@ -1,0 +1,13 @@
+"""Pure-jnp oracle for the embed_bag kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embed_bag_ref(idx, weights, table, *, mean: bool = False):
+    rows = table[idx]                               # (B, hot, D)
+    acc = jnp.sum(rows * weights[..., None].astype(rows.dtype), axis=1)
+    if mean:
+        denom = jnp.maximum(jnp.sum(weights, axis=1, keepdims=True), 1e-9)
+        acc = acc / denom.astype(acc.dtype)
+    return acc

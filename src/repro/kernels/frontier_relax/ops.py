@@ -1,0 +1,33 @@
+"""jit'd wrapper for the frontier_relax kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.frontier_relax.frontier_relax import (BLOCK_ROWS, INF32,
+                                                         LANES,
+                                                         frontier_relax_pallas)
+
+_TILE = BLOCK_ROWS * LANES
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def frontier_relax(dist: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
+                   level, *, interpret: bool = True) -> jnp.ndarray:
+    """bool[E] frontier-expansion mask for one BFS level."""
+    e = src.shape[0]
+    e_pad = -e % _TILE
+    src2d = jnp.concatenate([src, jnp.zeros((e_pad,), src.dtype)]).reshape(-1, LANES)
+    dst2d = jnp.concatenate([dst, jnp.zeros((e_pad,), dst.dtype)]).reshape(-1, LANES)
+    n = dist.shape[0]
+    n_pad = -n % _TILE
+    # Pad dist with INF (never on frontier, never undiscovered-eligible as
+    # src; pad edges point at node 0 whose true dist decides — then sliced off).
+    dist2d = jnp.concatenate(
+        [dist, jnp.full((n_pad,), INF32, dist.dtype)]).reshape(-1, LANES)
+    level_arr = jnp.asarray(level, jnp.int32).reshape(1, 1)
+    out = frontier_relax_pallas(src2d, dst2d, dist2d, level_arr,
+                                interpret=interpret)
+    return out.reshape(-1)[:e].astype(jnp.bool_)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the frontier_relax kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+INF32 = jnp.iinfo(jnp.int32).max
+
+
+def frontier_relax_ref(dist, src, dst, level):
+    return (dist[src] == level) & (dist[dst] == INF32)

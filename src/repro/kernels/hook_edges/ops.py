@@ -1,0 +1,31 @@
+"""jit'd wrapper for the hook_edges kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.hook_edges.hook_edges import (BLOCK_ROWS, LANES,
+                                                 hook_edges_pallas)
+
+_TILE = BLOCK_ROWS * LANES
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "interpret"))
+def hook_edges(src: jnp.ndarray, dst: jnp.ndarray, rep: jnp.ndarray,
+               use_min, *, n_nodes: int, interpret: bool = True):
+    """Per-edge hook proposals (tgt == n_nodes ⇒ drop). See kernel doc."""
+    e = src.shape[0]
+    e_pad = -e % _TILE
+    # Padding edges are self-loops on node 0 → non-cross → dropped.
+    src2d = jnp.concatenate([src, jnp.zeros((e_pad,), src.dtype)]).reshape(-1, LANES)
+    dst2d = jnp.concatenate([dst, jnp.zeros((e_pad,), dst.dtype)]).reshape(-1, LANES)
+    n = rep.shape[0]
+    n_pad = -n % _TILE
+    rep2d = jnp.concatenate(
+        [rep, jnp.arange(n, n + n_pad, dtype=rep.dtype)]).reshape(-1, LANES)
+    use_min_arr = jnp.asarray(use_min, jnp.int32).reshape(1, 1)
+    tgt, val = hook_edges_pallas(src2d, dst2d, rep2d, use_min_arr,
+                                 n_nodes=n_nodes, interpret=interpret)
+    return tgt.reshape(-1)[:e], val.reshape(-1)[:e]

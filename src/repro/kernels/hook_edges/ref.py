@@ -1,0 +1,15 @@
+"""Pure-jnp oracle for the hook_edges kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def hook_edges_ref(src, dst, rep, use_min: bool, n_nodes: int):
+    ru = rep[src]
+    rv = rep[dst]
+    cross = ru != rv
+    lo = jnp.minimum(ru, rv)
+    hi = jnp.maximum(ru, rv)
+    tgt = jnp.where(use_min, hi, lo)
+    val = jnp.where(use_min, lo, hi)
+    return jnp.where(cross, tgt, n_nodes), val

@@ -1,0 +1,51 @@
+"""jit'd wrappers for the list_rank kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.list_rank.list_rank import (BLOCK_ROWS, LANES, NO_SUCC,
+                                               list_rank_pallas)
+
+_TILE = BLOCK_ROWS * LANES
+
+
+def _pad(succ, dist):
+    n = succ.shape[0]
+    n_pad = -n % _TILE
+    succ2d = jnp.concatenate(
+        [succ, jnp.full((n_pad,), NO_SUCC, succ.dtype)]).reshape(-1, LANES)
+    dist2d = jnp.concatenate(
+        [dist, jnp.zeros((n_pad,), dist.dtype)]).reshape(-1, LANES)
+    return succ2d, dist2d, n
+
+
+@partial(jax.jit, static_argnames=("n_steps", "interpret"))
+def list_rank_k(succ: jnp.ndarray, dist: jnp.ndarray, *, n_steps: int = 5,
+                interpret: bool = True):
+    """One launch: (k+1)-hop chain prefix sum (see kernel docstring)."""
+    succ2d, dist2d, n = _pad(succ, dist)
+    s, d = list_rank_pallas(succ2d, dist2d, n_steps=n_steps,
+                            interpret=interpret)
+    return s.reshape(-1)[:n], d.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("n_steps", "interpret"))
+def list_rank(succ: jnp.ndarray, valid: jnp.ndarray, *, n_steps: int = 5,
+              interpret: bool = True) -> jnp.ndarray:
+    """Distance-to-end ranks via repeated multi-step launches."""
+    dist = jnp.where(valid & (succ != NO_SUCC), 1, 0).astype(jnp.int32)
+
+    def body(state):
+        s, d = state
+        s2, d2 = list_rank_k(s, d, n_steps=n_steps, interpret=interpret)
+        return s2, d2
+
+    def cond(state):
+        s, _ = state
+        return jnp.any(s != NO_SUCC)
+
+    _, dist = jax.lax.while_loop(cond, body, (succ, dist))
+    return dist

@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the list_rank kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NO_SUCC = -1
+
+
+def list_rank_steps_ref(succ: jnp.ndarray, dist: jnp.ndarray, n_steps: int):
+    """n_steps chained same-snapshot Wyllie updates (matches one launch)."""
+    succ_tab, dist_tab = succ, dist
+    for _ in range(n_steps):
+        has = succ != NO_SUCC
+        safe = jnp.where(has, succ, 0)
+        dist = dist + jnp.where(has, dist_tab[safe], 0)
+        succ = jnp.where(has, succ_tab[safe], NO_SUCC)
+    return succ, dist
+
+
+def list_rank_full_ref(succ: jnp.ndarray, valid: jnp.ndarray) -> jnp.ndarray:
+    """Distance-to-end for every list element (full convergence oracle)."""
+    dist = jnp.where(valid & (succ != NO_SUCC), 1, 0).astype(jnp.int32)
+
+    def body(state):
+        d, s = state
+        has = s != NO_SUCC
+        safe = jnp.where(has, s, 0)
+        d = jnp.where(has, d + d[safe], d)
+        s = jnp.where(has, s[safe], s)
+        return d, s
+
+    dist, _ = jax.lax.while_loop(lambda st: jnp.any(st[1] != NO_SUCC), body,
+                                 (dist, succ))
+    return dist

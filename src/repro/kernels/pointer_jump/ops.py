@@ -1,0 +1,49 @@
+"""jit'd wrappers for the pointer_jump kernel (padding + convergence loop)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pointer_jump.pointer_jump import (BLOCK_ROWS, LANES,
+                                                     pointer_jump_pallas)
+
+_TILE = BLOCK_ROWS * LANES
+
+
+def _pad_to_tile(p: jnp.ndarray):
+    n = p.shape[0]
+    n_pad = -n % _TILE
+    total = n + n_pad
+    # Pad entries self-point (inert under jumping).
+    pad_ids = jnp.arange(n, total, dtype=p.dtype)
+    p2d = jnp.concatenate([p, pad_ids]).reshape(-1, LANES)
+    return p2d, n
+
+
+@partial(jax.jit, static_argnames=("n_jumps", "interpret"))
+def pointer_jump_k(p: jnp.ndarray, *, n_jumps: int = 5,
+                   interpret: bool = True) -> jnp.ndarray:
+    """One kernel launch: follow the parent chain ``n_jumps + 1`` hops.
+
+    Equivalent to ``ref.pointer_jump_ref(p, n_jumps)`` — the paper's
+    multi-jump-per-launch trick (k+1-fold path compression per launch).
+    """
+    p2d, n = _pad_to_tile(p)
+    out = pointer_jump_pallas(p2d, n_jumps=n_jumps, interpret=interpret)
+    return out.reshape(-1)[:n]
+
+
+@partial(jax.jit, static_argnames=("n_jumps", "interpret"))
+def pointer_jump_until_converged(p: jnp.ndarray, *, n_jumps: int = 5,
+                                 interpret: bool = True) -> jnp.ndarray:
+    """Launch the multi-jump kernel until the table is fully compressed."""
+
+    def body(state):
+        p, _ = state
+        p2 = pointer_jump_k(p, n_jumps=n_jumps, interpret=interpret)
+        return p2, jnp.any(p2 != p)
+
+    p, _ = jax.lax.while_loop(lambda s: s[1], body, (p, jnp.bool_(True)))
+    return p

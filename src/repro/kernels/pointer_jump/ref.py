@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the pointer_jump kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pointer_jump_ref(p: jnp.ndarray, n_jumps: int) -> jnp.ndarray:
+    """Apply ``idx = p[idx]`` n_jumps times, starting from idx = p."""
+    idx = p
+    for _ in range(n_jumps):
+        idx = p[idx]
+    return idx

@@ -1,0 +1,247 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (verified
+empirically — a 12-iteration scan reports 1 iteration of FLOPs), which
+under-counts every scanned-layer model by ~L×. This module parses the
+optimized HLO text, multiplies op costs by ``known_trip_count`` from each
+while op's backend_config, and accounts:
+
+  * flops        — dot ops (2 · prod(result dims) · prod(contracting dims)),
+                   descending into fusions and called computations;
+  * bytes        — operand + result bytes at fusion boundaries (HBM traffic
+                   proxy; fusion internals stay in registers/VMEM);
+  * collectives  — per-op payload bytes (operand sizes) × trip multiplier,
+                   bucketed by opcode.
+
+Shapes are per-device (the compiled module is the SPMD-partitioned one), so
+all results are *per-chip* numbers — exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "token": 0, "opaque": 0,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+
+
+def _type_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> list[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    dims = m.group(2)
+    return [int(d) for d in dims.split(",") if d] if dims else []
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    result_type: str
+    operands: list
+    attrs: str
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*")
+
+
+def _split_op_line(s: str):
+    """Robustly split '%name = TYPE opcode(args), attrs' (TYPE may be a
+    tuple containing /*index=N*/ comments, layouts, etc.)."""
+    m = _NAME_RE.match(s)
+    if not m:
+        return None
+    name = m.group(1)
+    rest = s[m.end():]
+    # TYPE: either a balanced-paren tuple or a single token.
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    break
+        rtype = rest[:i + 1]
+        rest = rest[i + 1:].lstrip()
+    else:
+        sp = rest.find(" ")
+        if sp < 0:
+            return None
+        rtype = rest[:sp]
+        rest = rest[sp + 1:].lstrip()
+    par = rest.find("(")
+    if par < 0:
+        return None
+    opcode = rest[:par].strip()
+    if not re.fullmatch(r"[\w\-]+", opcode or ""):
+        return None
+    # args: balanced parens from `par`.
+    depth = 0
+    for i in range(par, len(rest)):
+        if rest[i] == "(":
+            depth += 1
+        elif rest[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+    args = rest[par + 1:i]
+    attrs = rest[i + 1:]
+    return name, rtype, opcode, args, attrs
+
+
+def parse_hlo(text: str):
+    """→ (computations: {name: [Op]}, op_types: {comp: {opname: type}})."""
+    computations: dict[str, list[Op]] = {}
+    op_types: dict[str, dict[str, str]] = {}
+    current = None
+    for line in text.splitlines():
+        s = line.rstrip()
+        header = re.match(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(.*\)\s*->", s)
+        if header and s.endswith("{"):
+            current = header.group(1)
+            computations[current] = []
+            op_types[current] = {}
+            continue
+        if s == "}":
+            current = None
+            continue
+        if current is None:
+            continue
+        parsed = _split_op_line(s)
+        if parsed is None:
+            continue
+        name, rtype, opcode, args, attrs = parsed
+        operands = re.findall(r"%([\w.\-]+)", args)
+        computations[current].append(
+            Op(name=name, opcode=opcode, result_type=rtype.strip(),
+               operands=operands, attrs=attrs))
+        op_types[current][name] = rtype.strip()
+    return computations, op_types
+
+
+def _trip_count(attrs: str) -> int:
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', attrs)
+    return int(m.group(1)) if m else 1
+
+
+def _dot_flops(op: Op, types: dict[str, str]) -> float:
+    out_elems = 1
+    for d in _shape_dims(op.result_type):
+        out_elems *= d
+    lhs_type = types.get(op.operands[0], "") if op.operands else ""
+    lhs_dims = _shape_dims(lhs_type)
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+    k = 1
+    if m and lhs_dims:
+        for idx in m.group(1).split(","):
+            if idx:
+                k *= lhs_dims[int(idx)]
+    return 2.0 * out_elems * k
+
+
+@dataclasses.dataclass
+class HloCost:
+    flops: float = 0.0
+    bytes_accessed: float = 0.0
+    collective_bytes: float = 0.0
+    per_collective: dict = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    while_without_trip: int = 0
+
+    def to_json(self) -> dict:
+        return {"flops": self.flops, "bytes_accessed": self.bytes_accessed,
+                "collective_bytes": self.collective_bytes,
+                "per_collective": dict(self.per_collective),
+                "while_without_trip": self.while_without_trip}
+
+
+def analyze(text: str) -> HloCost:
+    comps, op_types = parse_hlo(text)
+    cost = HloCost()
+
+    def called_comp(attrs: str, key: str):
+        m = re.search(rf"{key}=%([\w.\-]+)", attrs)
+        return m.group(1) if m else None
+
+    def visit(comp_name: str, mult: float, count_bytes: bool):
+        types = op_types.get(comp_name, {})
+        for op in comps.get(comp_name, ()):
+            oc = op.opcode
+            if oc == "while":
+                tc = _trip_count(op.attrs)
+                if tc == 1 and "known_trip_count" not in op.attrs:
+                    cost.while_without_trip += 1
+                body = called_comp(op.attrs, "body")
+                cond = called_comp(op.attrs, "condition")
+                if body:
+                    visit(body, mult * tc, count_bytes)
+                if cond:
+                    visit(cond, mult * tc, count_bytes)
+                continue
+            if oc in ("fusion", "call", "custom-call"):
+                callee = called_comp(op.attrs, "calls")
+                if callee:
+                    # Descend for FLOPs only; bytes at fusion boundary.
+                    visit(callee, mult, False)
+            if oc in ("dot", "dot-general"):
+                cost.flops += mult * _dot_flops(op, types)
+            if oc.startswith("convolution"):
+                # not used by our models; approximate via result × window
+                cost.flops += 0.0
+            if any(oc.startswith(c) for c in COLLECTIVE_OPS):
+                payload = sum(_type_bytes(types.get(o, ""))
+                              for o in op.operands)
+                if payload == 0:
+                    payload = _type_bytes(op.result_type)
+                base = oc.replace("-start", "")
+                cost.per_collective[base] += mult * payload
+                cost.collective_bytes += mult * payload
+            if count_bytes and oc not in ("parameter", "constant",
+                                          "get-tuple-element", "tuple",
+                                          "bitcast"):
+                b = _type_bytes(op.result_type)
+                b += sum(_type_bytes(types.get(o, "")) for o in op.operands)
+                cost.bytes_accessed += mult * b
+
+    # Entry computation is the last one in scheduled modules; find by name
+    # heuristics: computation referenced by none.
+    referenced = set()
+    for ops in comps.values():
+        for op in ops:
+            for key in ("calls", "body", "condition", "to_apply"):
+                c = called_comp(op.attrs, key)
+                if c:
+                    referenced.add(c)
+    entries = [c for c in comps if c not in referenced]
+    for e in entries:
+        visit(e, 1.0, True)
+    return cost

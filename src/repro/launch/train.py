@@ -1,0 +1,145 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [--smoke]``.
+
+Runs real steps on the local device(s) (smoke configs on CPU; full configs
+are for pods). Wires together: config registry → step factory →
+fault-tolerant loop (checkpoint/restart, watchdog, straggler log) →
+synthetic data pipeline per family.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.launch.mesh import make_host_mesh
+from repro.train.fault import FaultTolerantLoop
+from repro.train.step import build_cell
+from repro.optim.adamw import adamw_init
+
+
+def synthetic_batches(spec, shape, cfg, seed=0):
+    """Yield (cursor, batch) forever — family-appropriate synthetic data."""
+    rng = np.random.default_rng(seed)
+    cursor = 0
+    while True:
+        if spec.family == "lm":
+            b, s = shape["batch"], shape["seq"]
+            toks = rng.integers(0, cfg.vocab, (b, s + 1))
+            batch = {"tokens": jnp.asarray(toks[:, :-1], jnp.int32),
+                     "targets": jnp.asarray(toks[:, 1:], jnp.int32)}
+        elif spec.family == "gnn":
+            from repro.data.gnn_batch import random_graph_batch
+            needs_pos = spec.arch_id in ("schnet", "dimenet", "meshgraphnet")
+            atom = spec.arch_id in ("schnet", "dimenet")
+            nt = 4 * shape["n_edges"] if spec.arch_id == "dimenet" else 0
+            g = random_graph_batch(shape["n_nodes"], shape["n_edges"],
+                                   shape["d_feat"], seed=seed + cursor,
+                                   positions=needs_pos, atom_types=atom,
+                                   n_graphs=shape["n_graphs"],
+                                   max_triplets=nt)
+            gd = {"node_feat": g.node_feat, "src": g.src, "dst": g.dst,
+                  "graph_id": g.graph_id}
+            if g.positions is not None:
+                gd["positions"] = g.positions
+            if g.trip_in is not None:
+                gd["trip_in"] = g.trip_in
+                gd["trip_out"] = g.trip_out
+            if spec.arch_id == "gat-cora":
+                labels = jnp.asarray(
+                    rng.integers(0, cfg.n_classes, shape["n_nodes"]), jnp.int32)
+            elif spec.arch_id == "meshgraphnet":
+                labels = jnp.asarray(
+                    rng.standard_normal((shape["n_nodes"], 3)), jnp.float32)
+            else:
+                labels = jnp.asarray(
+                    rng.standard_normal(shape["n_graphs"]), jnp.float32)
+            batch = {"graph": gd, "labels": labels}
+        else:  # recsys
+            b, t = shape["batch"], cfg.seq_len
+            batch = {
+                "hist_items": jnp.asarray(rng.integers(0, cfg.n_items, (b, t)), jnp.int32),
+                "hist_cates": jnp.asarray(rng.integers(0, cfg.n_cates, (b, t)), jnp.int32),
+                "hist_mask": jnp.asarray(rng.random((b, t)) < 0.9),
+                "target_item": jnp.asarray(rng.integers(0, cfg.n_items, b), jnp.int32),
+                "target_cate": jnp.asarray(rng.integers(0, cfg.n_cates, b), jnp.int32),
+                "user_feats": jnp.asarray(rng.integers(0, cfg.n_user_feats, (b, cfg.user_hot)), jnp.int32),
+                "label": jnp.asarray(rng.integers(0, 2, b), jnp.int32),
+            }
+        yield cursor, batch
+        cursor += 1
+
+
+SMOKE_SHAPES = {
+    "lm": dict(kind="train", batch=4, seq=64),
+    "gnn": dict(kind="train", n_nodes=64, n_edges=256, d_feat=16, n_graphs=4),
+    "recsys": dict(kind="train", batch=16),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--ckpt-dir", default="artifacts/ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    args = ap.parse_args()
+
+    spec = get_arch(args.arch)
+    mesh = make_host_mesh()
+    cfg = spec.make_smoke_config() if args.smoke else spec.make_config()
+    if args.smoke:
+        shape = dict(SMOKE_SHAPES[spec.family])
+        if spec.family == "gnn":
+            shape["d_feat"] = getattr(
+                cfg, "d_in", getattr(cfg, "d_in_node", shape["d_feat"]))
+        shape_name = "smoke"
+        # Build a smoke cell by reusing the factory machinery with a
+        # patched shapes table.
+        import dataclasses as dc
+        spec = dc.replace(spec, shapes={"smoke": shape})
+    else:
+        shape_name = args.shape or list(spec.shapes)[0]
+        shape = spec.shapes[shape_name]
+
+    step_fn, state_abs, _ = build_cell(spec, shape_name, mesh,
+                                       smoke=args.smoke)
+
+    # Real init matching the abstract state tree.
+    from repro.train.step import gnn_make_init
+    from repro.models import transformer as tfm, dien as dien_mod
+    key = jax.random.key(0)
+    if spec.family == "lm":
+        params = tfm.init_params(cfg, key)
+    elif spec.family == "gnn":
+        params = gnn_make_init(spec.arch_id, cfg)(cfg, key)
+    else:
+        params = dien_mod.dien_init(cfg, key)
+    state = {"params": params, "opt": adamw_init(params)}
+
+    jit_step = jax.jit(step_fn)
+    loop = FaultTolerantLoop(
+        step_fn=jit_step, state=state,
+        data_iter=synthetic_batches(spec, shape, cfg),
+        ckpt_dir=f"{args.ckpt_dir}/{args.arch}",
+        ckpt_every=args.ckpt_every)
+    loop.resume()
+
+    t0 = time.time()
+    def on_metrics(step, metrics, dt):
+        if step % 5 == 0 or step == 1:
+            loss = float(metrics["loss"])
+            print(f"step {step:5d}  loss {loss:.4f}  {dt*1e3:.0f} ms")
+
+    loop.run(args.steps, on_metrics=on_metrics)
+    print(f"done: {args.steps} steps in {time.time()-t0:.1f}s; "
+          f"retries={loop.retries} stragglers={len(loop.stragglers)}")
+
+
+if __name__ == "__main__":
+    main()

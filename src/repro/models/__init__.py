@@ -1,0 +1,1 @@
+"""Assigned architectures: LM transformers (dense + MoE), GNNs, recsys."""

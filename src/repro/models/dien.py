@@ -1,0 +1,246 @@
+"""DIEN — Deep Interest Evolution Network  [arXiv:1809.03672].
+
+Config (assigned): embed_dim=18, seq_len=100, gru_dim=108, mlp=200-80,
+interaction=augru.
+
+Structure:
+  1. sparse embeddings: item + category tables (the EmbeddingBag substrate —
+     multi-hot user-profile fields go through the ``embed_bag`` Pallas
+     kernel path);
+  2. interest extractor: GRU over the behavior sequence (lax.scan);
+  3. interest evolution: attention scores w.r.t. the target item drive an
+     AUGRU (attention-gated update);
+  4. prediction MLP 200→80→1 on [final_state ‖ target ‖ user ‖ sum-pool].
+
+Serving shapes:
+  serve_p99/serve_bulk — batched CTR scoring (one target per row);
+  retrieval_cand       — ONE user vs 10^6 candidates: the target-independent
+      interest GRU runs once, then attention+AUGRU is vmapped over candidate
+      blocks (batched compute, no loop over candidates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class DIENConfig:
+    name: str = "dien"
+    embed_dim: int = 18
+    seq_len: int = 100
+    gru_dim: int = 108
+    mlp_dims: tuple = (200, 80)
+    n_items: int = 1_000_000
+    n_cates: int = 10_000
+    n_user_feats: int = 100_000
+    user_hot: int = 8            # multi-hot user profile field width
+    dtype: Any = jnp.float32
+    # The embed_bag Pallas kernel targets TPU; its interpret-mode fallback
+    # lowers to a while loop whose per-step dynamic slices GSPMD turns into
+    # all-gathers (292 GB/chip artifact on serve_bulk). Dry-run/SPMD cells
+    # use the pure-XLA reference path instead (same math, §Perf P5).
+    use_embed_kernel: bool = True
+
+    @property
+    def d_behavior(self) -> int:
+        return 2 * self.embed_dim     # item ‖ cate
+
+
+def dien_init(cfg: DIENConfig, key):
+    ks = jax.random.split(key, 10)
+    d_in = cfg.d_behavior
+    g = cfg.gru_dim
+
+    def table(k, n, d):
+        return (jax.random.normal(k, (n, d), jnp.float32) * 0.05
+                ).astype(cfg.dtype)
+
+    def gru_params(k, d_x, d_h):
+        k1, k2, k3 = jax.random.split(k, 3)
+        s = (d_x + d_h) ** -0.5
+        return {
+            "wz": (jax.random.normal(k1, (d_x + d_h, d_h)) * s).astype(cfg.dtype),
+            "wr": (jax.random.normal(k2, (d_x + d_h, d_h)) * s).astype(cfg.dtype),
+            "wh": (jax.random.normal(k3, (d_x + d_h, d_h)) * s).astype(cfg.dtype),
+            "bz": jnp.zeros((d_h,), cfg.dtype),
+            "br": jnp.zeros((d_h,), cfg.dtype),
+            "bh": jnp.zeros((d_h,), cfg.dtype),
+        }
+
+    mlp_in = g + d_in + cfg.embed_dim + g   # final ‖ target ‖ user ‖ sumpool
+    dims = [mlp_in, *cfg.mlp_dims, 1]
+    mlp = []
+    for i, k in enumerate(jax.random.split(ks[5], len(dims) - 1)):
+        a, b = dims[i], dims[i + 1]
+        mlp.append(((jax.random.normal(k, (a, b)) * a ** -0.5).astype(cfg.dtype),
+                    jnp.zeros((b,), cfg.dtype)))
+
+    att_in = 2 * g
+    return {
+        "item_table": table(ks[0], cfg.n_items, cfg.embed_dim),
+        "cate_table": table(ks[1], cfg.n_cates, cfg.embed_dim),
+        "user_table": table(ks[2], cfg.n_user_feats, cfg.embed_dim),
+        "gru1": gru_params(ks[3], d_in, g),
+        "augru": gru_params(ks[4], d_in, g),
+        "att_w": (jax.random.normal(ks[6], (g, g)) * g ** -0.5).astype(cfg.dtype),
+        "proj_target": (jax.random.normal(ks[7], (cfg.d_behavior, g))
+                        * cfg.d_behavior ** -0.5).astype(cfg.dtype),
+        "mlp": mlp,
+    }
+
+
+def _embed_bag_mean(cfg: DIENConfig, idx, table):
+    if cfg.use_embed_kernel:
+        from repro.kernels.embed_bag.ops import embed_bag
+        return embed_bag(idx, table, mean=True)
+    from repro.kernels.embed_bag.ref import embed_bag_ref
+    w = jnp.ones(idx.shape, jnp.float32)
+    return embed_bag_ref(idx, w, table, mean=True)
+
+
+def _gru_cell(p, x, h):
+    xh = jnp.concatenate([x, h], -1)
+    z = jax.nn.sigmoid(xh @ p["wz"] + p["bz"])
+    r = jax.nn.sigmoid(xh @ p["wr"] + p["br"])
+    xh2 = jnp.concatenate([x, r * h], -1)
+    h_tilde = jnp.tanh(xh2 @ p["wh"] + p["bh"])
+    return (1 - z) * h + z * h_tilde
+
+
+def _augru_cell(p, x, h, a):
+    """AUGRU: attention score a scales the update gate."""
+    xh = jnp.concatenate([x, h], -1)
+    z = jax.nn.sigmoid(xh @ p["wz"] + p["bz"]) * a[..., None]
+    r = jax.nn.sigmoid(xh @ p["wr"] + p["br"])
+    xh2 = jnp.concatenate([x, r * h], -1)
+    h_tilde = jnp.tanh(xh2 @ p["wh"] + p["bh"])
+    return (1 - z) * h + z * h_tilde
+
+
+def interest_extractor(cfg: DIENConfig, params, behavior):
+    """GRU over behavior [B, T, d] → hidden states [B, T, g]."""
+    b = behavior.shape[0]
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+
+    def step(h, x_t):
+        h = _gru_cell(params["gru1"], x_t, h)
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, behavior.swapaxes(0, 1))
+    return hs.swapaxes(0, 1)                             # [B, T, g]
+
+
+def interest_evolution(cfg: DIENConfig, params, hs, behavior, target_vec,
+                       mask):
+    """Attention (vs target) + AUGRU → final state [B, g]."""
+    t_proj = target_vec @ params["proj_target"]          # [B, g]
+    scores = jnp.einsum("btg,gh,bh->bt", hs, params["att_w"], t_proj)
+    scores = jnp.where(mask, scores, -1e30)
+    alpha = jax.nn.softmax(scores.astype(jnp.float32), -1).astype(cfg.dtype)
+
+    b = hs.shape[0]
+    h0 = jnp.zeros((b, cfg.gru_dim), cfg.dtype)
+
+    def step(h, xs):
+        x_t, a_t = xs
+        h = _augru_cell(params["augru"], x_t, h, a_t)
+        return h, None
+
+    h, _ = jax.lax.scan(step, h0,
+                        (behavior.swapaxes(0, 1), alpha.swapaxes(0, 1)))
+    return h
+
+
+def dien_forward(cfg: DIENConfig, params, batch):
+    """CTR logits [B].
+
+    batch: dict with
+      hist_items, hist_cates: [B, T] int32; hist_mask: [B, T] bool
+      target_item, target_cate: [B] int32
+      user_feats: [B, hot] int32 (multi-hot → embedding bag)
+    """
+    it = params["item_table"][batch["hist_items"]]
+    ct = params["cate_table"][batch["hist_cates"]]
+    behavior = jnp.concatenate([it, ct], -1)             # [B, T, 2e]
+    mask = batch["hist_mask"]
+    behavior = jnp.where(mask[..., None], behavior, 0)
+
+    tgt = jnp.concatenate([params["item_table"][batch["target_item"]],
+                           params["cate_table"][batch["target_cate"]]], -1)
+
+    hs = interest_extractor(cfg, params, behavior)
+    final = interest_evolution(cfg, params, hs, behavior, tgt, mask)
+
+    user = _embed_bag_mean(cfg, batch["user_feats"], params["user_table"])
+    sumpool = jnp.sum(jnp.where(mask[..., None], hs, 0), axis=1) / \
+        jnp.maximum(mask.sum(-1, keepdims=True), 1).astype(hs.dtype)
+
+    feat = jnp.concatenate([final, tgt, user.astype(cfg.dtype), sumpool], -1)
+    x = feat
+    for i, (w, b) in enumerate(params["mlp"]):
+        x = x @ w + b
+        if i + 1 < len(params["mlp"]):
+            x = jax.nn.relu(x)
+    return x[:, 0]
+
+
+def dien_loss(cfg: DIENConfig, params, batch):
+    logits = dien_forward(cfg, params, batch).astype(jnp.float32)
+    y = batch["label"].astype(jnp.float32)
+    return jnp.mean(jnp.maximum(logits, 0) - logits * y +
+                    jnp.log1p(jnp.exp(-jnp.abs(logits))))
+
+
+def dien_retrieval_score(cfg: DIENConfig, params, batch, *,
+                         cand_block: int = 8192):
+    """One user vs n_candidates: scores [n_candidates].
+
+    batch: hist_items/hist_cates/hist_mask [1, T]; user_feats [1, hot];
+           cand_items, cand_cates: [C] int32.
+    The interest GRU runs ONCE; attention+AUGRU evolve per candidate in
+    vmapped blocks (the offline-retrieval-scoring workload).
+    """
+    it = params["item_table"][batch["hist_items"]]
+    ct = params["cate_table"][batch["hist_cates"]]
+    behavior = jnp.concatenate([it, ct], -1)
+    mask = batch["hist_mask"]
+    behavior = jnp.where(mask[..., None], behavior, 0)
+    hs = interest_extractor(cfg, params, behavior)       # [1, T, g]
+    user = _embed_bag_mean(cfg, batch["user_feats"], params["user_table"])
+    sumpool = jnp.sum(jnp.where(mask[..., None], hs, 0), axis=1) / \
+        jnp.maximum(mask.sum(-1, keepdims=True), 1).astype(hs.dtype)
+
+    c = batch["cand_items"].shape[0]
+    pad = -c % cand_block
+    ci = jnp.pad(batch["cand_items"], (0, pad))
+    cc = jnp.pad(batch["cand_cates"], (0, pad))
+    n_blocks = (c + pad) // cand_block
+    blk = cand_block
+    cand_items = ci.reshape(n_blocks, blk)
+    cand_cates = cc.reshape(n_blocks, blk)
+
+    def score_block(items, cates):
+        tgt = jnp.concatenate([params["item_table"][items],
+                               params["cate_table"][cates]], -1)  # [blk, 2e]
+        hs_b = jnp.broadcast_to(hs, (blk,) + hs.shape[1:])
+        beh_b = jnp.broadcast_to(behavior, (blk,) + behavior.shape[1:])
+        mask_b = jnp.broadcast_to(mask, (blk,) + mask.shape[1:])
+        final = interest_evolution(cfg, params, hs_b, beh_b, tgt, mask_b)
+        user_b = jnp.broadcast_to(user, (blk, user.shape[-1]))
+        pool_b = jnp.broadcast_to(sumpool, (blk, sumpool.shape[-1]))
+        feat = jnp.concatenate([final, tgt, user_b.astype(cfg.dtype), pool_b], -1)
+        x = feat
+        for i, (w, b) in enumerate(params["mlp"]):
+            x = x @ w + b
+            if i + 1 < len(params["mlp"]):
+                x = jax.nn.relu(x)
+        return x[:, 0]
+
+    _, scores = jax.lax.scan(
+        lambda _, xs: (None, score_block(*xs)), None,
+        (cand_items, cand_cates))
+    return scores.reshape(-1)

@@ -1,0 +1,464 @@
+"""GNN architectures: GAT, SchNet, DimeNet, MeshGraphNet.
+
+Message passing is built on ``jax.ops.segment_sum``-family scatter ops over
+an explicit edge index (JAX has no sparse SpMM beyond BCOO — the
+scatter/gather substrate IS part of the system, shared with the RST
+kernels). All shapes are static: graphs are padded to fixed (N, E[, T])
+with sentinel indices == N (dropped by scatter ``mode='drop'``).
+
+Kernel regimes per the taxonomy:
+  GAT           SDDMM edge scores → segment-softmax → weighted scatter-sum
+  SchNet        RBF edge filters (cfconv) → scatter-sum
+  DimeNet       triplet gather (k→j→i) with angular×radial basis → bilinear
+  MeshGraphNet  edge+node MLPs, encode-process-decode, sum aggregation
+
+The RST library runs in these models' data pipeline (component detection +
+RST-based node reordering — see ``repro.data.partition``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Batched graph container (fixed shapes; pad with src == dst == n_nodes)
+# ---------------------------------------------------------------------------
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class GraphBatch:
+    n_nodes: int                      # static (includes padding)
+    node_feat: jnp.ndarray            # [N, F] float or [N] int (atom types)
+    src: jnp.ndarray                  # [E] int32
+    dst: jnp.ndarray                  # [E] int32
+    positions: jnp.ndarray | None = None    # [N, 3]
+    graph_id: jnp.ndarray | None = None     # [N] int32 (molecule batching)
+    n_graphs: int = 1                 # static
+    trip_in: jnp.ndarray | None = None      # [T] edge id (k→j)
+    trip_out: jnp.ndarray | None = None     # [T] edge id (j→i)
+
+    def tree_flatten(self):
+        children = (self.node_feat, self.src, self.dst, self.positions,
+                    self.graph_id, self.trip_in, self.trip_out)
+        return children, (self.n_nodes, self.n_graphs)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        nf, src, dst, pos, gid, ti, to = children
+        return cls(n_nodes=aux[0], node_feat=nf, src=src, dst=dst,
+                   positions=pos, graph_id=gid, n_graphs=aux[1],
+                   trip_in=ti, trip_out=to)
+
+
+import contextvars
+
+# Mesh axes for activation sharding constraints (set by the step factory
+# for full-scale cells; unset → no constraints, e.g. smoke tests).
+_GNN_DATA_AXES: contextvars.ContextVar[tuple] = contextvars.ContextVar(
+    "gnn_data_axes", default=())
+
+
+def set_gnn_data_axes(axes: tuple):
+    _GNN_DATA_AXES.set(tuple(axes))
+
+
+def _constrain_rows(x: jnp.ndarray) -> jnp.ndarray:
+    """Shard the leading (node/edge/triplet) dim over the data axes."""
+    axes = _GNN_DATA_AXES.get()
+    if not axes:
+        return x
+    from jax.sharding import PartitionSpec as P
+    spec = P(axes, *([None] * (x.ndim - 1)))
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def scatter_sum(values: jnp.ndarray, index: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Σ over edges into nodes; out-of-range (padding) indices dropped."""
+    out = jnp.zeros((n,) + values.shape[1:], values.dtype)
+    return _constrain_rows(out.at[index].add(values, mode="drop"))
+
+
+def segment_softmax(scores: jnp.ndarray, index: jnp.ndarray, n: int):
+    """Softmax over incoming edges per node. scores: [E, H]."""
+    neg_inf = jnp.asarray(-1e30, scores.dtype)
+    mx = jnp.full((n,) + scores.shape[1:], neg_inf, scores.dtype)
+    mx = mx.at[index].max(scores, mode="drop")
+    ex = jnp.exp(scores - mx[jnp.clip(index, 0, n - 1)])
+    ex = jnp.where((index < n)[:, None], ex, 0)
+    den = scatter_sum(ex, index, n)
+    return ex / jnp.maximum(den[jnp.clip(index, 0, n - 1)], 1e-16)
+
+
+def _mlp(params: list, x: jnp.ndarray, act=jax.nn.relu,
+         final_act: bool = False) -> jnp.ndarray:
+    for i, (w, b) in enumerate(params):
+        x = x @ w + b
+        if i + 1 < len(params) or final_act:
+            x = act(x)
+    return x
+
+
+def _init_mlp(key, dims, dtype=jnp.float32):
+    keys = jax.random.split(key, len(dims) - 1)
+    return [((jax.random.normal(k, (a, b), jnp.float32) * (a ** -0.5)
+              ).astype(dtype), jnp.zeros((b,), dtype))
+            for k, a, b in zip(keys, dims[:-1], dims[1:])]
+
+
+# ---------------------------------------------------------------------------
+# GAT  [arXiv:1710.10903] — n_layers=2, d_hidden=8, n_heads=8, attn agg
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GATConfig:
+    name: str = "gat-cora"
+    n_layers: int = 2
+    d_hidden: int = 8
+    n_heads: int = 8
+    d_in: int = 1433
+    n_classes: int = 7
+    dtype: Any = jnp.float32
+
+
+def gat_init(cfg: GATConfig, key):
+    keys = jax.random.split(key, cfg.n_layers)
+    layers = []
+    d_in = cfg.d_in
+    for i, k in enumerate(keys):
+        heads = cfg.n_heads
+        d_out = cfg.d_hidden if i + 1 < cfg.n_layers else cfg.n_classes
+        kw, ka1, ka2 = jax.random.split(k, 3)
+        layers.append({
+            "w": (jax.random.normal(kw, (d_in, heads, d_out), jnp.float32)
+                  * d_in ** -0.5).astype(cfg.dtype),
+            "a_src": jnp.zeros((heads, d_out), cfg.dtype),
+            "a_dst": jnp.zeros((heads, d_out), cfg.dtype),
+        })
+        d_in = heads * d_out
+    return {"layers": layers}
+
+
+def gat_forward(cfg: GATConfig, params, g: GraphBatch) -> jnp.ndarray:
+    n = g.n_nodes
+    x = g.node_feat.astype(cfg.dtype)
+    for i, lp in enumerate(params["layers"]):
+        h = _constrain_rows(jnp.einsum("nf,fhd->nhd", x, lp["w"]))  # [N, H, D]
+        e_src = jnp.sum(h * lp["a_src"], -1)               # [N, H]
+        e_dst = jnp.sum(h * lp["a_dst"], -1)
+        src_safe = jnp.clip(g.src, 0, n - 1)
+        dst_safe = jnp.clip(g.dst, 0, n - 1)
+        scores = jax.nn.leaky_relu(
+            e_src[src_safe] + e_dst[dst_safe], 0.2)        # [E, H]
+        alpha = segment_softmax(scores, g.dst, n)          # [E, H]
+        msg = _constrain_rows(h[src_safe] * alpha[..., None])  # [E, H, D]
+        agg = scatter_sum(jnp.where((g.dst < n)[:, None, None], msg, 0),
+                          g.dst, n)                        # [N, H, D]
+        last = i + 1 == len(params["layers"])
+        x = agg.mean(1) if last else jax.nn.elu(agg.reshape(n, -1))
+    return x                                                # [N, n_classes]
+
+
+# ---------------------------------------------------------------------------
+# SchNet  [arXiv:1706.08566] — 3 interactions, d=64, rbf=300, cutoff=10
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class SchNetConfig:
+    name: str = "schnet"
+    n_interactions: int = 3
+    d_hidden: int = 64
+    n_rbf: int = 300
+    cutoff: float = 10.0
+    n_atom_types: int = 100
+    dtype: Any = jnp.float32
+
+
+def _ssp(x):
+    """Shifted softplus (SchNet activation)."""
+    return jax.nn.softplus(x) - float(np.log(2.0))
+
+
+def schnet_init(cfg: SchNetConfig, key):
+    keys = jax.random.split(key, cfg.n_interactions + 3)
+    d = cfg.d_hidden
+    inter = []
+    for k in keys[:cfg.n_interactions]:
+        k1, k2, k3, k4 = jax.random.split(k, 4)
+        inter.append({
+            "filter": _init_mlp(k1, [cfg.n_rbf, d, d], cfg.dtype),
+            "w_in": _init_mlp(k2, [d, d], cfg.dtype),
+            "w_out": _init_mlp(k3, [d, d, d], cfg.dtype),
+        })
+    return {
+        "embed": (jax.random.normal(keys[-3], (cfg.n_atom_types, d))
+                  * 0.1).astype(cfg.dtype),
+        "inter": inter,
+        "readout": _init_mlp(keys[-2], [d, d // 2, 1], cfg.dtype),
+    }
+
+
+def schnet_forward(cfg: SchNetConfig, params, g: GraphBatch) -> jnp.ndarray:
+    """Per-graph energy [n_graphs]."""
+    n = g.n_nodes
+    h = params["embed"][jnp.clip(g.node_feat.astype(jnp.int32), 0,
+                                 params["embed"].shape[0] - 1)]
+    src_safe = jnp.clip(g.src, 0, n - 1)
+    dst_safe = jnp.clip(g.dst, 0, n - 1)
+    d_ij = jnp.linalg.norm(g.positions[dst_safe] - g.positions[src_safe] + 1e-9,
+                           axis=-1)
+
+    # RBF expansion (E × n_rbf — 74 GB fp32 at ogb_products scale) is
+    # recomputed INSIDE each remat'd interaction rather than stashed.
+    def edge_filter(lp_filter):
+        centers = jnp.linspace(0.0, cfg.cutoff, cfg.n_rbf)
+        gamma = cfg.n_rbf / cfg.cutoff
+        rbf = jnp.exp(-gamma * (d_ij[:, None] - centers) ** 2).astype(cfg.dtype)
+        env = 0.5 * (jnp.cos(jnp.pi * jnp.clip(d_ij / cfg.cutoff, 0, 1)) + 1.0)
+        w = _mlp(lp_filter, rbf, act=_ssp, final_act=True)
+        return _constrain_rows(w * env[:, None].astype(cfg.dtype))
+
+    for lp in params["inter"]:
+        @jax.checkpoint
+        def interaction(h, lp=lp):
+            w = edge_filter(lp["filter"])
+            x = _mlp(lp["w_in"], h)
+            msg = _constrain_rows(x[src_safe] * w)
+            agg = scatter_sum(jnp.where((g.dst < n)[:, None], msg, 0),
+                              g.dst, n)
+            return h + _mlp(lp["w_out"], agg, act=_ssp)
+
+        h = interaction(h)
+
+    atom_e = _mlp(params["readout"], h, act=_ssp)[:, 0]     # [N]
+    gid = g.graph_id if g.graph_id is not None else jnp.zeros((n,), jnp.int32)
+    return scatter_sum(atom_e, gid, g.n_graphs)
+
+
+# ---------------------------------------------------------------------------
+# DimeNet  [arXiv:2003.03123] — 6 blocks, d=128, bilinear=8, sph=7, rad=6
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DimeNetConfig:
+    name: str = "dimenet"
+    n_blocks: int = 6
+    d_hidden: int = 128
+    n_bilinear: int = 8
+    n_spherical: int = 7
+    n_radial: int = 6
+    cutoff: float = 5.0
+    n_atom_types: int = 100
+    dtype: Any = jnp.float32
+
+
+def dimenet_init(cfg: DimeNetConfig, key):
+    keys = jax.random.split(key, cfg.n_blocks + 4)
+    d = cfg.d_hidden
+    blocks = []
+    for k in keys[:cfg.n_blocks]:
+        k1, k2, k3, k4, k5 = jax.random.split(k, 5)
+        blocks.append({
+            "w_sbf": (jax.random.normal(
+                k1, (cfg.n_spherical * cfg.n_radial, cfg.n_bilinear))
+                * 0.1).astype(cfg.dtype),
+            "bilinear": (jax.random.normal(k2, (d, cfg.n_bilinear, d))
+                         * (d ** -0.5) * 0.1).astype(cfg.dtype),
+            "w_kj": _init_mlp(k3, [d, d], cfg.dtype),
+            "w_ji": _init_mlp(k4, [d, d], cfg.dtype),
+            "update": _init_mlp(k5, [d, d, d], cfg.dtype),
+        })
+    return {
+        "embed": (jax.random.normal(keys[-4], (cfg.n_atom_types, d)) * 0.1
+                  ).astype(cfg.dtype),
+        "rbf_proj": _init_mlp(keys[-3], [cfg.n_radial, d], cfg.dtype),
+        "edge_init": _init_mlp(keys[-2], [3 * d, d], cfg.dtype),
+        "blocks": blocks,
+        "out": _init_mlp(keys[-1], [d, d // 2, 1], cfg.dtype),
+    }
+
+
+def dimenet_forward(cfg: DimeNetConfig, params, g: GraphBatch) -> jnp.ndarray:
+    """Per-graph energy via directional message passing on edges.
+
+    Adaptation note (DESIGN.md): the spherical-Bessel/Legendre basis is
+    replaced by an equivalently-shaped Bessel-radial × Chebyshev-angular
+    basis (n_radial × n_spherical features) — same tensor structure and
+    cost, TPU-friendly closed forms.
+    """
+    n = g.n_nodes
+    e = g.src.shape[0]
+    src_safe = jnp.clip(g.src, 0, n - 1)
+    dst_safe = jnp.clip(g.dst, 0, n - 1)
+    vec = g.positions[dst_safe] - g.positions[src_safe]      # j→i per edge
+    d_ij = jnp.linalg.norm(vec + 1e-9, axis=-1)
+
+    # Radial basis: sin(kπ d / c) / d  (Bessel j0 harmonics).
+    kk = jnp.arange(1, cfg.n_radial + 1, dtype=jnp.float32)
+    rbf = (jnp.sin(kk * jnp.pi * (d_ij / cfg.cutoff)[:, None])
+           / jnp.maximum(d_ij, 1e-6)[:, None]).astype(cfg.dtype)
+
+    h = params["embed"][jnp.clip(g.node_feat.astype(jnp.int32), 0,
+                                 params["embed"].shape[0] - 1)]
+    rbf_d = _mlp(params["rbf_proj"], rbf)
+    m = _constrain_rows(_mlp(params["edge_init"],
+             jnp.concatenate([h[src_safe], h[dst_safe], rbf_d], -1),
+             act=jax.nn.silu, final_act=True))              # [E, d]
+
+    return _dimenet_blocks(cfg, params, g, m, rbf, vec, n)
+
+
+def _pick_chunks(t: int, target: int) -> int:
+    """Largest chunk count ≤ t/target that divides t (static Python)."""
+    n = max(1, t // target)
+    while t % n:
+        n -= 1
+    return n
+
+
+def _dimenet_blocks(cfg, params, g, m, rbf, vec, n):
+    """Interaction blocks with CHUNKED triplet processing.
+
+    At ogb_products scale there are 247M triplets; materializing the
+    angular×radial basis (T × 42 fp32) plus the bilinear messages (T × 128)
+    costs ~0.5 TB/chip if stashed per block. Instead triplets stream
+    through a ``lax.scan`` in chunks: basis + gather + bilinear + scatter
+    per chunk, under remat, accumulating into the per-edge aggregate.
+    """
+    e = m.shape[0]
+    d = m.shape[1]
+    t = g.trip_in.shape[0]
+    n_chunks = _pick_chunks(t, 4_194_304)
+    tc = t // n_chunks
+    ti_all = g.trip_in.reshape(n_chunks, tc)
+    to_all = g.trip_out.reshape(n_chunks, tc)
+
+    def triplet_chunk(m_kj, bp, ti_raw, to_raw):
+        ti = jnp.clip(ti_raw, 0, e - 1)
+        to = jnp.clip(to_raw, 0, e - 1)
+        valid = (ti_raw < e) & (to_raw < e)
+        v_in = -vec[ti]                                  # j→k direction
+        v_out = vec[to]
+        cos_a = jnp.sum(v_in * v_out, -1) / jnp.maximum(
+            jnp.linalg.norm(v_in + 1e-9, -1)
+            * jnp.linalg.norm(v_out + 1e-9, -1), 1e-9)
+        angles = jnp.arccos(jnp.clip(cos_a, -1.0, 1.0))
+        # Chebyshev angular basis T_l(cos α) × radial basis of the in-edge.
+        sph = jnp.cos(angles[:, None] * jnp.arange(cfg.n_spherical))
+        sbf = (sph[:, :, None] * rbf[ti].astype(jnp.float32)[:, None, :]
+               ).reshape(tc, -1).astype(cfg.dtype)
+        basis = sbf @ bp["w_sbf"]                        # [tc, n_bilinear]
+        tmsg = jnp.einsum("td,dbe,tb->te", m_kj[ti], bp["bilinear"], basis)
+        tmsg = jnp.where(valid[:, None], tmsg, 0)
+        return _constrain_rows(
+            jnp.zeros((e, d), m.dtype).at[to].add(tmsg, mode="drop"))
+
+    # Inter-block carry in bf16 for huge graphs (halves the per-block
+    # residual stash; block math stays in cfg.dtype).
+    carry_dtype = jnp.bfloat16 if e >= (1 << 22) else m.dtype
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *params["blocks"])
+
+    @jax.checkpoint
+    def one_block(m_c, bp):
+        m = m_c.astype(cfg.dtype)
+        m_kj = _constrain_rows(_mlp(bp["w_kj"], m))      # [E, d]
+
+        @jax.checkpoint
+        def chunk_step(agg, idx):
+            return agg + triplet_chunk(m_kj, bp, ti_all[idx],
+                                       to_all[idx]), None
+
+        agg, _ = jax.lax.scan(chunk_step, jnp.zeros((e, d), m.dtype),
+                              jnp.arange(n_chunks))
+        m = m + _mlp(bp["update"], _mlp(bp["w_ji"], m) + agg,
+                     act=jax.nn.silu)
+        return _constrain_rows(m.astype(carry_dtype))
+
+    m, _ = jax.lax.scan(lambda c, bp: (one_block(c, bp), None),
+                        m.astype(carry_dtype), stacked)
+    m = m.astype(cfg.dtype)
+    edge_e = _mlp(params["out"], m, act=jax.nn.silu)[:, 0]
+    node_e = scatter_sum(jnp.where(g.dst < n, edge_e, 0), g.dst, n)
+    gid = g.graph_id if g.graph_id is not None else jnp.zeros((n,), jnp.int32)
+    return scatter_sum(node_e, gid, g.n_graphs)
+
+
+# ---------------------------------------------------------------------------
+# MeshGraphNet  [arXiv:2010.03409] — 15 layers, d=128, sum agg, 2-layer MLPs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MGNConfig:
+    name: str = "meshgraphnet"
+    n_layers: int = 15
+    d_hidden: int = 128
+    mlp_layers: int = 2
+    d_in_node: int = 8
+    d_in_edge: int = 4
+    d_out: int = 3
+    dtype: Any = jnp.float32
+
+
+def _ln(x):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + 1e-6)
+
+
+def mgn_init(cfg: MGNConfig, key):
+    d = cfg.d_hidden
+    keys = jax.random.split(key, cfg.n_layers + 3)
+    dims_node = [2 * d] + [d] * cfg.mlp_layers
+    dims_edge = [3 * d] + [d] * cfg.mlp_layers
+    layers = [{"edge_mlp": _init_mlp(jax.random.fold_in(k, 0), dims_edge, cfg.dtype),
+               "node_mlp": _init_mlp(jax.random.fold_in(k, 1), dims_node, cfg.dtype)}
+              for k in keys[:cfg.n_layers]]
+    # Stack the identical layers → scannable pytree (leading dim L).
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {
+        "enc_node": _init_mlp(keys[-3], [cfg.d_in_node, d, d], cfg.dtype),
+        "enc_edge": _init_mlp(keys[-2], [cfg.d_in_edge, d, d], cfg.dtype),
+        "layers": stacked,
+        "dec": _init_mlp(keys[-1], [d, d, cfg.d_out], cfg.dtype),
+    }
+
+
+def mgn_forward(cfg: MGNConfig, params, g: GraphBatch) -> jnp.ndarray:
+    """Per-node output [N, d_out] (e.g. accelerations).
+
+    The 15 processor layers run under ``lax.scan`` with per-layer remat —
+    at ogb_products scale the edge latents are 61.8M × 128 floats per
+    layer, so storing all layers' intermediates for backward is a ~180 GiB
+    per-chip bill; remat trades one forward recompute for an O(1)-in-depth
+    stash.
+    """
+    n = g.n_nodes
+    src_safe = jnp.clip(g.src, 0, n - 1)
+    dst_safe = jnp.clip(g.dst, 0, n - 1)
+    h = _mlp(params["enc_node"], g.node_feat.astype(cfg.dtype))
+    if g.positions is not None:
+        rel = g.positions[dst_safe] - g.positions[src_safe]
+        dist = jnp.linalg.norm(rel + 1e-9, axis=-1, keepdims=True)
+        ef = jnp.concatenate([rel, dist], -1).astype(cfg.dtype)
+    else:
+        ef = jnp.zeros((g.src.shape[0], cfg.d_in_edge), cfg.dtype)
+    he = _mlp(params["enc_edge"], ef)
+    dst_ok = (g.dst < n)[:, None]
+
+    @jax.checkpoint
+    def one_layer(carry, lp):
+        h, he = carry
+        e_in = jnp.concatenate([he, h[src_safe], h[dst_safe]], -1)
+        he = _constrain_rows(he + _ln(_mlp(lp["edge_mlp"], e_in, act=jax.nn.relu)))
+        agg = scatter_sum(jnp.where(dst_ok, he, 0), g.dst, n)
+        n_in = jnp.concatenate([h, agg], -1)
+        h = _constrain_rows(h + _ln(_mlp(lp["node_mlp"], n_in, act=jax.nn.relu)))
+        return (h, he), None
+
+    (h, he), _ = jax.lax.scan(lambda c, lp: one_layer(c, lp), (h, he),
+                              params["layers"])
+    return _mlp(params["dec"], h)

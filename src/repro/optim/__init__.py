@@ -1,0 +1,4 @@
+"""Optimizers, schedules, gradient transformations."""
+from repro.optim.adamw import adamw_init, adamw_update, clip_by_global_norm
+from repro.optim.schedule import wsd_schedule, cosine_schedule
+from repro.optim.compression import compress_int8, decompress_int8

@@ -1,0 +1,61 @@
+"""AdamW with bf16 compute params / fp32 master + moments.
+
+State layout mirrors the param pytree so every leaf inherits the param's
+sharding (FSDP states shard identically to their weights).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def adamw_init(params):
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    master = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return {"m": zeros, "v": jax.tree.map(jnp.zeros_like, zeros),
+            "master": master, "step": jnp.zeros((), jnp.int32)}
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-12))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+def adamw_update(grads, opt_state, lr, *, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, max_norm: float | None = 1.0,
+                 compute_dtype=jnp.bfloat16):
+    """Returns (new_params_compute, new_opt_state, grad_norm)."""
+    if max_norm is not None:
+        grads, gn = clip_by_global_norm(grads, max_norm)
+    else:
+        gn = jnp.zeros(())
+    step = opt_state["step"] + 1
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, master):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / c1
+        vhat = v / c2
+        new_master = master - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                                    + weight_decay * master)
+        return m, v, new_master
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_m = jax.tree.leaves(opt_state["m"])
+    flat_v = jax.tree.leaves(opt_state["v"])
+    flat_ma = jax.tree.leaves(opt_state["master"])
+    out = [upd(g, m, v, ma) for g, m, v, ma in
+           zip(flat_g, flat_m, flat_v, flat_ma)]
+    new_m = jax.tree.unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree.unflatten(treedef, [o[1] for o in out])
+    new_master = jax.tree.unflatten(treedef, [o[2] for o in out])
+    new_params = jax.tree.map(lambda p: p.astype(compute_dtype), new_master)
+    return new_params, {"m": new_m, "v": new_v, "master": new_master,
+                        "step": step}, gn

@@ -1,0 +1,41 @@
+"""int8 gradient compression with error feedback (cross-pod wire format).
+
+The cross-pod gradient all-reduce is the slowest collective on the 2-pod
+mesh (DCN-class links). Compressing the pod-axis reduction payload 4×
+(fp32→int8 per-block scaling) with an error-feedback residual keeps
+convergence intact (1-bit Adam lineage). Used by ``train.step`` when
+``grad_compression='int8'``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def compress_int8(x: jnp.ndarray):
+    """x: float array → (int8 payload, per-block fp32 scales, pad)."""
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = -flat.shape[0] % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    q = jnp.clip(jnp.round(blocks / jnp.maximum(scale, 1e-12)), -127, 127)
+    return q.astype(jnp.int8), scale, pad
+
+
+def decompress_int8(q: jnp.ndarray, scale: jnp.ndarray, pad: int, shape,
+                    dtype=jnp.float32):
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    return flat.reshape(shape).astype(dtype)
+
+
+def compress_with_error_feedback(grad: jnp.ndarray, residual: jnp.ndarray):
+    """Returns (quantized-roundtrip grad, new residual)."""
+    g = grad.astype(jnp.float32) + residual
+    q, s, pad = compress_int8(g)
+    deq = decompress_int8(q, s, pad, g.shape)
+    return deq.astype(grad.dtype), g - deq

@@ -1,0 +1,29 @@
+"""LR schedules: WSD (minicpm's Warmup-Stable-Decay) and cosine."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def wsd_schedule(step, *, peak_lr: float, warmup: int, stable: int,
+                 decay: int, final_frac: float = 0.1):
+    """Warmup-Stable-Decay  [arXiv:2404.06395 §4].
+
+    Linear warmup → constant plateau → exponential-ish (linear here) decay
+    to final_frac · peak over the decay window.
+    """
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    stab = jnp.asarray(peak_lr, jnp.float32)
+    t = jnp.clip((s - warmup - stable) / max(decay, 1), 0.0, 1.0)
+    dec = peak_lr * (1.0 - (1.0 - final_frac) * t)
+    lr = jnp.where(s < warmup, warm, jnp.where(s < warmup + stable, stab, dec))
+    return lr
+
+
+def cosine_schedule(step, *, peak_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1):
+    s = step.astype(jnp.float32)
+    warm = peak_lr * s / max(warmup, 1)
+    t = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+    cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(s < warmup, warm, peak_lr * cos)

@@ -1,0 +1,321 @@
+"""Step factories per architecture family.
+
+Each factory returns ``(step_fn, abstract_state, abstract_inputs)`` where the
+abstract trees are ShapeDtypeStructs carrying NamedShardings — ready for
+``jax.jit(step_fn).lower(state, inputs)`` (the dry-run path) or for real
+initialization + execution (examples/tests path).
+
+Train state = {"params": compute-dtype tree, "opt": AdamW state (fp32
+master + moments, sharded like params), "rng": key}.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shr
+from repro.models import transformer as tfm
+from repro.models import gnn as gnn_mod
+from repro.models import dien as dien_mod
+from repro.optim.adamw import adamw_init, adamw_update
+from repro.optim.schedule import wsd_schedule, cosine_schedule
+
+
+def _abstract(tree, mesh: Mesh, spec_tree):
+    """ShapeDtypeStruct tree with NamedShardings attached."""
+    def mk(x, spec):
+        return jax.ShapeDtypeStruct(x.shape, x.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(mk, tree, spec_tree,
+                        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+
+
+def _opt_specs(param_specs):
+    return {"m": param_specs, "v": param_specs, "master": param_specs,
+            "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# LM
+# ---------------------------------------------------------------------------
+
+def lm_train_cell(cfg, mesh: Mesh, *, batch: int, seq: int, fsdp: bool,
+                  use_wsd: bool = False, peak_lr: float = 3e-4):
+    pspecs = shr.lm_param_specs(cfg, mesh, fsdp=fsdp)
+    params_shape = jax.eval_shape(partial(tfm.init_params, cfg),
+                                  jax.random.key(0))
+    opt_shape = jax.eval_shape(adamw_init, params_shape)
+    state_abs = _abstract({"params": params_shape, "opt": opt_shape},
+                          mesh, {"params": pspecs,
+                                 "opt": _opt_specs(pspecs)})
+    inputs_abs = shr.lm_input_specs(mesh, batch, seq)
+
+    def step_fn(state, batch_in):
+        tfm.set_lm_mesh(mesh if cfg.moe_expert_axis is not None else None)
+
+        def loss_fn(p):
+            return tfm.lm_loss(cfg, p, batch_in["tokens"],
+                               batch_in["targets"])
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        if use_wsd:
+            lr = wsd_schedule(state["opt"]["step"], peak_lr=peak_lr,
+                              warmup=2000, stable=100_000, decay=20_000)
+        else:
+            lr = cosine_schedule(state["opt"]["step"], peak_lr=peak_lr,
+                                 warmup=2000, total=120_000)
+        new_params, new_opt, gn = adamw_update(grads, state["opt"], lr,
+                                               compute_dtype=cfg.dtype)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, "grad_norm": gn, "lr": lr})
+
+    return step_fn, state_abs, inputs_abs
+
+
+def lm_prefill_cell(cfg, mesh: Mesh, *, batch: int, seq: int, fsdp: bool):
+    pspecs = shr.lm_param_specs(cfg, mesh, fsdp=fsdp)
+    params_shape = jax.eval_shape(partial(tfm.init_params, cfg),
+                                  jax.random.key(0))
+    params_abs = _abstract(params_shape, mesh, pspecs)
+    da = shr.data_axes(mesh)
+    tokens_abs = {"tokens": jax.ShapeDtypeStruct(
+        (batch, seq), jnp.int32, sharding=shr.ns(mesh, da, None))}
+
+    def step_fn(params, batch_in):
+        tfm.set_lm_mesh(mesh if cfg.moe_expert_axis is not None else None)
+        # Serving prefill returns last-token logits (next-token head);
+        # compute the unembed on the last position only.
+        h = tfm.forward_hidden(cfg, params, batch_in["tokens"])
+        logits = h[:, -1, :] @ tfm._unembed(cfg, params)
+        return logits[:, :cfg.vocab].astype(jnp.float32)
+
+    return step_fn, params_abs, tokens_abs
+
+
+def lm_decode_cell(cfg, mesh: Mesh, *, batch: int, seq: int, fsdp: bool):
+    pspecs = shr.lm_param_specs(cfg, mesh, fsdp=fsdp)
+    params_shape = jax.eval_shape(partial(tfm.init_params, cfg),
+                                  jax.random.key(0))
+    params_abs = _abstract(params_shape, mesh, pspecs)
+    cache_abs, tok_abs = shr.lm_cache_specs(cfg, mesh, batch, seq)
+    inputs_abs = {"token": tok_abs["token"], "cache": cache_abs}
+
+    def step_fn(params, inputs):
+        logits, new_cache = tfm.decode_step(cfg, params, inputs["token"],
+                                            inputs["cache"])
+        return logits, new_cache
+
+    return step_fn, params_abs, inputs_abs
+
+
+# ---------------------------------------------------------------------------
+# GNN
+# ---------------------------------------------------------------------------
+
+def _gnn_forward_and_loss(arch_id: str, cfg, params, g, labels):
+    if arch_id == "gat-cora":
+        logits = gnn_mod.gat_forward(cfg, params, g)
+        logz = jax.nn.logsumexp(logits.astype(jnp.float32), -1)
+        gold = jnp.take_along_axis(logits.astype(jnp.float32),
+                                   labels[:, None], axis=-1)[:, 0]
+        return jnp.mean(logz - gold)
+    if arch_id == "schnet":
+        e = gnn_mod.schnet_forward(cfg, params, g)
+        return jnp.mean((e - labels) ** 2)
+    if arch_id == "dimenet":
+        e = gnn_mod.dimenet_forward(cfg, params, g)
+        return jnp.mean((e - labels) ** 2)
+    if arch_id == "meshgraphnet":
+        out = gnn_mod.mgn_forward(cfg, params, g)
+        return jnp.mean((out - labels) ** 2)
+    raise KeyError(arch_id)
+
+
+def gnn_label_spec(arch_id: str, mesh: Mesh, shape: dict):
+    da = shr.data_axes(mesh)
+    if arch_id == "gat-cora":
+        return jax.ShapeDtypeStruct((shape["n_nodes"],), jnp.int32,
+                                    sharding=shr.ns(mesh, da))
+    if arch_id in ("schnet", "dimenet"):
+        # Per-graph energies; n_graphs may be < mesh axis → replicate.
+        return jax.ShapeDtypeStruct((shape["n_graphs"],), jnp.float32,
+                                    sharding=shr.ns(mesh))
+    if arch_id == "meshgraphnet":
+        return jax.ShapeDtypeStruct((shape["n_nodes"], 3), jnp.float32,
+                                    sharding=shr.ns(mesh, da, None))
+    raise KeyError(arch_id)
+
+
+def gnn_make_init(arch_id: str, cfg):
+    return {
+        "gat-cora": gnn_mod.gat_init,
+        "schnet": gnn_mod.schnet_init,
+        "dimenet": gnn_mod.dimenet_init,
+        "meshgraphnet": gnn_mod.mgn_init,
+    }[arch_id]
+
+
+def gnn_train_cell(arch_id: str, cfg, mesh: Mesh, shape: dict, *,
+                   peak_lr: float = 1e-3, constrain: bool = True):
+    init = gnn_make_init(arch_id, cfg)
+    params_shape = jax.eval_shape(partial(init, cfg), jax.random.key(0))
+    pspecs = shr.gnn_param_specs(params_shape)
+    opt_shape = jax.eval_shape(adamw_init, params_shape)
+    state_abs = _abstract({"params": params_shape, "opt": opt_shape},
+                          mesh, {"params": pspecs,
+                                 "opt": _opt_specs(pspecs)})
+
+    needs_pos = arch_id in ("schnet", "dimenet", "meshgraphnet")
+    atom_types = arch_id in ("schnet", "dimenet")
+    n_trip = 4 * shape["n_edges"] if arch_id == "dimenet" else 0
+    g_abs = shr.gnn_input_specs(
+        mesh, n_nodes=shape["n_nodes"], n_edges=shape["n_edges"],
+        d_feat=shape["d_feat"], positions=needs_pos, atom_types=atom_types,
+        n_graphs=shape["n_graphs"], n_triplets=n_trip)
+    inputs_abs = {"graph": g_abs,
+                  "labels": gnn_label_spec(arch_id, mesh, shape)}
+
+    n_nodes = shape["n_nodes"]
+    n_graphs = shape["n_graphs"]
+
+    data_axes = shr.data_axes(mesh) if constrain else ()
+
+    def step_fn(state, batch_in):
+        gnn_mod.set_gnn_data_axes(data_axes)
+        gb = batch_in["graph"]
+        g = gnn_mod.GraphBatch(
+            n_nodes=n_nodes, node_feat=gb["node_feat"], src=gb["src"],
+            dst=gb["dst"], positions=gb.get("positions"),
+            graph_id=gb["graph_id"], n_graphs=n_graphs,
+            trip_in=gb.get("trip_in"), trip_out=gb.get("trip_out"))
+
+        def loss_fn(p):
+            return _gnn_forward_and_loss(arch_id, cfg, p, g,
+                                         batch_in["labels"])
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        lr = cosine_schedule(state["opt"]["step"], peak_lr=peak_lr,
+                             warmup=100, total=10_000)
+        new_params, new_opt, gn = adamw_update(grads, state["opt"], lr,
+                                               compute_dtype=cfg.dtype)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, "grad_norm": gn})
+
+    return step_fn, state_abs, inputs_abs
+
+
+# ---------------------------------------------------------------------------
+# RecSys (DIEN)
+# ---------------------------------------------------------------------------
+
+def dien_train_cell(cfg, mesh: Mesh, *, batch: int, peak_lr: float = 1e-3):
+    params_shape = jax.eval_shape(partial(dien_mod.dien_init, cfg),
+                                  jax.random.key(0))
+    pspecs = shr.dien_param_specs(params_shape)
+    opt_shape = jax.eval_shape(adamw_init, params_shape)
+    state_abs = _abstract({"params": params_shape, "opt": opt_shape},
+                          mesh, {"params": pspecs,
+                                 "opt": _opt_specs(pspecs)})
+    inputs_abs = shr.dien_input_specs(mesh, cfg, batch)
+
+    def step_fn(state, batch_in):
+        def loss_fn(p):
+            return dien_mod.dien_loss(cfg, p, batch_in)
+        loss, grads = jax.value_and_grad(loss_fn)(state["params"])
+        lr = cosine_schedule(state["opt"]["step"], peak_lr=peak_lr,
+                             warmup=500, total=50_000)
+        new_params, new_opt, gn = adamw_update(grads, state["opt"], lr,
+                                               compute_dtype=cfg.dtype)
+        return ({"params": new_params, "opt": new_opt},
+                {"loss": loss, "grad_norm": gn})
+
+    return step_fn, state_abs, inputs_abs
+
+
+def dien_serve_cell(cfg, mesh: Mesh, *, batch: int):
+    params_shape = jax.eval_shape(partial(dien_mod.dien_init, cfg),
+                                  jax.random.key(0))
+    pspecs = shr.dien_param_specs(params_shape, replicate_tables=True)
+    params_abs = _abstract(params_shape, mesh, pspecs)
+    inputs_abs = shr.dien_input_specs(mesh, cfg, batch)
+    inputs_abs.pop("label")
+
+    def step_fn(params, batch_in):
+        return jax.nn.sigmoid(dien_mod.dien_forward(cfg, params, batch_in))
+
+    return step_fn, params_abs, inputs_abs
+
+
+def dien_retrieval_cell(cfg, mesh: Mesh, *, n_candidates: int):
+    params_shape = jax.eval_shape(partial(dien_mod.dien_init, cfg),
+                                  jax.random.key(0))
+    pspecs = shr.dien_param_specs(params_shape, replicate_tables=True)
+    params_abs = _abstract(params_shape, mesh, pspecs)
+    inputs_abs = shr.dien_retrieval_specs(mesh, cfg, n_candidates)
+
+    def step_fn(params, batch_in):
+        return dien_mod.dien_retrieval_score(cfg, params, batch_in,
+                                             cand_block=8192)
+
+    return step_fn, params_abs, inputs_abs
+
+
+# ---------------------------------------------------------------------------
+# Dispatcher
+# ---------------------------------------------------------------------------
+
+def build_cell(spec, shape_name: str, mesh: Mesh, *, smoke: bool = False):
+    """(step_fn, abstract_state_or_params, abstract_inputs) for one cell."""
+    import dataclasses as dc
+
+    cfg = spec.make_smoke_config() if smoke else spec.make_config()
+    shape = dict(spec.shapes[shape_name])
+    kind = shape["kind"]
+    if spec.family == "lm":
+        if not smoke and kind in ("train", "prefill"):
+            # Activation sharding policy (measured in EXPERIMENTS.md §Perf):
+            #   * train: sequence-parallel residual (seq over `model`) —
+            #     shrinks every remat stash slice 16×; the attention
+            #     KV all-gather it induces is amortized by the backward.
+            #   * prefill: NO seq-sharding — prefill has no stash to save,
+            #     and seq-sharded chunked attention all-gathers K/V once
+            #     per q-chunk (S/q_chunk × KV bytes × L ≈ 1–2 TB/chip at
+            #     32k — measured P4) while batch-sharded attention keeps
+            #     heads on the model axis collective-free.
+            upd = dict(act_batch_axes=shr.data_axes(mesh))
+            if kind == "train":
+                upd["act_seq_axis"] = "model"
+                upd["remat_groups"] = {16: 4, 28: 7, 40: 8, 48: 8}.get(
+                    cfg.n_layers, 0)
+            if cfg.is_moe:
+                upd["moe_expert_axis"] = "model"
+            cfg = dc.replace(cfg, **upd)
+        if kind == "train":
+            return lm_train_cell(cfg, mesh, batch=shape["batch"],
+                                 seq=shape["seq"], fsdp=spec.fsdp,
+                                 use_wsd=spec.arch_id == "minicpm-2b")
+        if kind == "prefill":
+            return lm_prefill_cell(cfg, mesh, batch=shape["batch"],
+                                   seq=shape["seq"], fsdp=spec.fsdp)
+        if kind == "decode":
+            return lm_decode_cell(cfg, mesh, batch=shape["batch"],
+                                  seq=shape["seq"], fsdp=spec.fsdp)
+    if spec.family == "gnn":
+        if spec.arch_id == "gat-cora":
+            cfg = type(cfg)(**{**cfg.__dict__, "d_in": shape["d_feat"]})
+        if spec.arch_id == "meshgraphnet":
+            cfg = type(cfg)(**{**cfg.__dict__, "d_in_node": shape["d_feat"]})
+        return gnn_train_cell(spec.arch_id, cfg, mesh, shape,
+                              constrain=not smoke)
+    if spec.family == "recsys":
+        if not smoke:
+            cfg = dc.replace(cfg, use_embed_kernel=False)
+        if kind == "train":
+            return dien_train_cell(cfg, mesh, batch=shape["batch"])
+        if kind == "serve":
+            return dien_serve_cell(cfg, mesh, batch=shape["batch"])
+        if kind == "retrieval":
+            return dien_retrieval_cell(cfg, mesh,
+                                       n_candidates=shape["n_candidates"])
+    raise KeyError(f"{spec.arch_id}/{shape_name}")

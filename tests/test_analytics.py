@@ -1,0 +1,56 @@
+"""Downstream tree analytics (subtree sizes, depths) on RST outputs."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Graph, rooted_spanning_tree
+from repro.core.analytics import depths, subtree_sizes
+from repro.data.graphs import erdos_renyi, grid2d
+
+
+def _ref_subtree_sizes(parent: np.ndarray) -> np.ndarray:
+    n = len(parent)
+    sizes = np.ones(n, np.int64)
+    order = np.argsort([-_depth(parent, v) for v in range(n)])
+    for v in order:
+        if parent[v] != v:
+            sizes[parent[v]] += sizes[v]
+    return sizes
+
+
+def _depth(parent, v):
+    d = 0
+    while parent[v] != v:
+        v = parent[v]
+        d += 1
+    return d
+
+
+@pytest.mark.parametrize("method", ["bfs", "gconn_euler", "pr_rst"])
+def test_subtree_sizes_on_rst(method):
+    g = erdos_renyi(80, avg_degree=4, seed=11)
+    res = rooted_spanning_tree(g, 5, method=method)
+    parent = np.asarray(res.parent)
+    parent = np.where(parent < 0, np.arange(len(parent)), parent)
+    sizes = np.asarray(subtree_sizes(jnp.asarray(parent, jnp.int32)))
+    ref = _ref_subtree_sizes(parent)
+    assert np.array_equal(sizes, ref)
+    assert sizes[5] == 80                    # root's subtree spans the graph
+
+
+def test_depths_match_bfs_dist():
+    g = grid2d(10)
+    res = rooted_spanning_tree(g, 0, method="bfs")
+    d = np.asarray(depths(res.parent))
+    assert np.array_equal(d, np.asarray(res.dist))
+
+
+def test_depths_random_tree():
+    rng = np.random.default_rng(3)
+    n = 200
+    parent = np.zeros(n, np.int64)
+    for v in range(1, n):
+        parent[v] = rng.integers(0, v)
+    d = np.asarray(depths(jnp.asarray(parent, jnp.int32)))
+    for v in [0, 1, 50, 199]:
+        assert d[v] == _depth(parent, v)

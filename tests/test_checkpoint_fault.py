@@ -1,0 +1,117 @@
+"""Checkpoint save/restore, atomicity, retention, elastic restore, and the
+fault-tolerant loop (resume + straggler log)."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.train import checkpoint as ckpt
+from repro.train.fault import FaultTolerantLoop
+
+
+def _state(seed=0):
+    k = jax.random.key(seed)
+    return {"params": {"w": jax.random.normal(k, (8, 8)),
+                       "b": jnp.zeros((8,), jnp.bfloat16)},
+            "opt": {"step": jnp.int32(7)}}
+
+
+def test_save_restore_roundtrip(tmp_path):
+    s = _state()
+    ckpt.save(tmp_path, s, step=3, data_cursor=42)
+    restored, manifest = ckpt.restore(tmp_path, jax.eval_shape(lambda: s))
+    assert manifest["step"] == 3 and manifest["data_cursor"] == 42
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_retention_keeps_last_n(tmp_path):
+    s = _state()
+    for step in range(6):
+        ckpt.save(tmp_path, s, step=step, keep=2)
+    assert ckpt.latest_step(tmp_path) == 5
+    dirs = sorted(d.name for d in tmp_path.iterdir() if d.is_dir())
+    assert dirs == ["step_0000000004", "step_0000000005"]
+
+
+def test_tree_mismatch_rejected(tmp_path):
+    ckpt.save(tmp_path, _state(), step=0)
+    bad = {"params": {"w": jnp.zeros((8, 8))}, "opt": {"step": jnp.int32(0)}}
+    with pytest.raises(ValueError, match="tree mismatch"):
+        ckpt.restore(tmp_path, bad)
+
+
+def test_async_save(tmp_path):
+    t = ckpt.save(tmp_path, _state(), step=9, blocking=False)
+    t.join()
+    assert ckpt.latest_step(tmp_path) == 9
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """Restore onto explicit (trivial-mesh) shardings — the elastic path."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    s = _state()
+    ckpt.save(tmp_path, s, step=1)
+    shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), s)
+    restored, _ = ckpt.restore(tmp_path, jax.eval_shape(lambda: s),
+                               shardings=shardings)
+    w = restored["params"]["w"]
+    assert isinstance(w.sharding, NamedSharding)
+    np.testing.assert_array_equal(np.asarray(w), np.asarray(s["params"]["w"]))
+
+
+def test_fault_tolerant_loop_resume(tmp_path):
+    """Train 10 steps w/ ckpt_every=4, kill, resume — continues from 8."""
+    def step_fn(state, batch):
+        s = state["opt"]["step"] + 1
+        return ({"params": state["params"], "opt": {"step": s}},
+                {"loss": jnp.float32(1.0) / s.astype(jnp.float32)})
+
+    def data():
+        c = 0
+        while True:
+            yield c, {"x": jnp.zeros(())}
+            c += 1
+
+    s0 = {"params": {"w": jnp.zeros((2,))}, "opt": {"step": jnp.int32(0)}}
+    loop = FaultTolerantLoop(step_fn=step_fn, state=s0, data_iter=data(),
+                             ckpt_dir=tmp_path, ckpt_every=4,
+                             async_ckpt=False)
+    loop.run(10)
+    assert int(loop.state["opt"]["step"]) == 10
+
+    loop2 = FaultTolerantLoop(step_fn=step_fn, state=s0, data_iter=data(),
+                              ckpt_dir=tmp_path, ckpt_every=4,
+                              async_ckpt=False)
+    start = loop2.resume()
+    assert start == 8                      # last multiple of ckpt_every
+    loop2.run(12)
+    assert int(loop2.state["opt"]["step"]) == 12
+
+
+def test_straggler_detection(tmp_path):
+    import time
+
+    calls = {"n": 0}
+
+    def step_fn(state, batch):
+        calls["n"] += 1
+        if calls["n"] == 5:
+            time.sleep(0.25)               # synthetic straggler
+        return state, {"loss": jnp.float32(0.0)}
+
+    def data():
+        c = 0
+        while True:
+            yield c, {}
+            c += 1
+
+    loop = FaultTolerantLoop(step_fn=step_fn, state={"x": jnp.zeros(())},
+                             data_iter=data(), ckpt_dir=tmp_path,
+                             ckpt_every=1000, straggler_factor=3.0)
+    loop.run(8)
+    assert len(loop.stragglers) >= 1
+    assert loop.stragglers[0][0] == 4      # 0-indexed step of the slow call

@@ -1,0 +1,106 @@
+"""Pallas kernel sweeps: shapes × dtypes, assert_allclose vs ref oracles."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_allclose, assert_array_equal
+
+rng = np.random.default_rng(42)
+
+
+@pytest.mark.parametrize("n", [3, 64, 1024, 1025, 5000])
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_pointer_jump_sweep(n, k):
+    from repro.kernels.pointer_jump.ops import pointer_jump_k
+    from repro.kernels.pointer_jump.ref import pointer_jump_ref
+    p = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+    assert_array_equal(np.asarray(pointer_jump_k(p, n_jumps=k)),
+                       np.asarray(pointer_jump_ref(p, k)))
+
+
+def test_pointer_jump_converges_deep_chain():
+    from repro.kernels.pointer_jump.ops import pointer_jump_until_converged
+    n = 3000
+    p = jnp.asarray(np.maximum(np.arange(n) - 1, 0), jnp.int32)
+    out = pointer_jump_until_converged(p)
+    assert (np.asarray(out) == 0).all()
+
+
+@pytest.mark.parametrize("n", [2, 129, 2048])
+@pytest.mark.parametrize("k", [1, 5])
+def test_list_rank_sweep(n, k):
+    from repro.kernels.list_rank.ops import list_rank, list_rank_k
+    from repro.kernels.list_rank.ref import (list_rank_full_ref,
+                                             list_rank_steps_ref)
+    perm = rng.permutation(n)
+    succ = np.full(n, -1, np.int32)
+    for a, b in zip(perm[:-1], perm[1:]):
+        succ[a] = b
+    succ = jnp.asarray(succ)
+    valid = jnp.ones(n, bool)
+    assert_array_equal(np.asarray(list_rank(succ, valid, n_steps=k)),
+                       np.asarray(list_rank_full_ref(succ, valid)))
+    d0 = jnp.where(succ != -1, 1, 0).astype(jnp.int32)
+    s1, d1 = list_rank_k(succ, d0, n_steps=k)
+    s2, d2 = list_rank_steps_ref(succ, d0, k)
+    assert_array_equal(np.asarray(s1), np.asarray(s2))
+    assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+@pytest.mark.parametrize("n,e", [(10, 17), (300, 1111), (1024, 4096)])
+@pytest.mark.parametrize("use_min", [True, False])
+def test_hook_edges_sweep(n, e, use_min):
+    from repro.kernels.hook_edges.ops import hook_edges
+    from repro.kernels.hook_edges.ref import hook_edges_ref
+    rep = jnp.asarray(rng.integers(0, n, n), jnp.int32)
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    t1, v1 = hook_edges(src, dst, rep, use_min, n_nodes=n)
+    t2, v2 = hook_edges_ref(src, dst, rep, use_min, n)
+    assert_array_equal(np.asarray(t1), np.asarray(t2))
+    assert_array_equal(np.asarray(v1), np.asarray(v2))
+
+
+@pytest.mark.parametrize("n,e,level", [(50, 200, 0), (512, 2048, 3)])
+def test_frontier_relax_sweep(n, e, level):
+    from repro.kernels.frontier_relax.ops import frontier_relax
+    from repro.kernels.frontier_relax.ref import INF32, frontier_relax_ref
+    dist = jnp.asarray(np.where(rng.random(n) < 0.5,
+                                rng.integers(0, 6, n), INF32), jnp.int32)
+    src = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    dst = jnp.asarray(rng.integers(0, n, e), jnp.int32)
+    assert_array_equal(np.asarray(frontier_relax(dist, src, dst, level)),
+                       np.asarray(frontier_relax_ref(dist, src, dst, level)))
+
+
+@pytest.mark.parametrize("b,hot,v,d", [(4, 3, 20, 18), (33, 8, 100, 128),
+                                       (8, 1, 10, 300), (128, 16, 512, 64)])
+@pytest.mark.parametrize("mean", [False, True])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_embed_bag_sweep(b, hot, v, d, mean, dtype):
+    from repro.kernels.embed_bag.ops import embed_bag
+    from repro.kernels.embed_bag.ref import embed_bag_ref
+    idx = jnp.asarray(rng.integers(0, v, (b, hot)), jnp.int32)
+    w = jnp.asarray(rng.random((b, hot)), jnp.float32)
+    tab = jnp.asarray(rng.standard_normal((v, d)), dtype)
+    o1 = np.asarray(embed_bag(idx, tab, w, mean=mean), np.float32)
+    o2 = np.asarray(embed_bag_ref(idx, w, tab, mean=mean), np.float32)
+    tol = 1e-6 if dtype == jnp.float32 else 2e-2
+    assert_allclose(o1, o2, rtol=tol, atol=tol)
+
+
+def test_embed_bag_vjp_matches_ref():
+    from repro.kernels.embed_bag.ops import embed_bag
+    from repro.kernels.embed_bag.ref import embed_bag_ref
+    b, hot, v, d = 6, 4, 30, 20
+    idx = jnp.asarray(rng.integers(0, v, (b, hot)), jnp.int32)
+    w = jnp.asarray(rng.random((b, hot)), jnp.float32)
+    tab = jnp.asarray(rng.standard_normal((v, d)), jnp.float32)
+    for mean in (False, True):
+        f1 = lambda t, ww: jnp.sum(jnp.sin(embed_bag(idx, t, ww, mean=mean)))
+        f2 = lambda t, ww: jnp.sum(jnp.sin(embed_bag_ref(idx, ww, t, mean=mean)))
+        g1 = jax.grad(f1, argnums=(0, 1))(tab, w)
+        g2 = jax.grad(f2, argnums=(0, 1))(tab, w)
+        for a, b_ in zip(g1, g2):
+            assert_allclose(np.asarray(a), np.asarray(b_), rtol=1e-5,
+                            atol=1e-6)

@@ -1,0 +1,100 @@
+"""Property-based tests (hypothesis): RST invariants on random graphs."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Graph, connected_components, rooted_spanning_tree)
+from repro.core.euler import euler_tour_root, list_rank_dist_to_end
+from repro.core.validate import components_reference, validate_rst
+
+
+@st.composite
+def random_graphs(draw, max_n=40, max_extra=60):
+    n = draw(st.integers(2, max_n))
+    n_extra = draw(st.integers(0, max_extra))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    # random spanning tree + extra edges → connected
+    perm = rng.permutation(n)
+    edges = [(int(perm[i]), int(perm[rng.integers(0, i)]))
+             for i in range(1, n)]
+    for _ in range(n_extra):
+        u, v = rng.integers(0, n, 2)
+        if u != v:
+            edges.append((int(u), int(v)))
+    root = draw(st.integers(0, n - 1))
+    return Graph.from_numpy_undirected(n, np.asarray(edges)), root
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_graphs())
+def test_all_methods_produce_valid_rst(gr):
+    g, root = gr
+    for method in ("bfs", "gconn_euler", "pr_rst"):
+        res = rooted_spanning_tree(g, root, method=method)
+        v = validate_rst(g, res.parent, root)
+        assert v["all_ok"], (method, v, np.asarray(res.parent))
+
+
+@st.composite
+def random_any_graphs(draw, max_n=30):
+    """Possibly-disconnected graphs."""
+    n = draw(st.integers(2, max_n))
+    m = draw(st.integers(0, 2 * max_n))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    edges = np.stack([rng.integers(0, n, m), rng.integers(0, n, m)], 1) \
+        if m else np.zeros((0, 2), np.int64)
+    return Graph.from_numpy_undirected(n, edges)
+
+
+@settings(max_examples=25, deadline=None)
+@given(random_any_graphs())
+def test_connectivity_partition_and_forest_size(g):
+    rep, forest, _ = connected_components(g)
+    ref = components_reference(g)
+    rep_np = np.asarray(rep)
+    n = g.n_nodes
+    # identical partitions
+    ref_of_rep = {}
+    for v in range(n):
+        r = rep_np[v]
+        if r in ref_of_rep:
+            assert ref_of_rep[r] == ref[v]
+        else:
+            ref_of_rep[r] = ref[v]
+    assert len(ref_of_rep) == len(set(ref.tolist()))
+    # forest has exactly n - n_components edges
+    assert int(np.asarray(forest).sum()) == n - len(set(ref.tolist()))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 200), st.integers(0, 2**31 - 1))
+def test_list_ranking_permutation(n, seed):
+    """Wyllie ranking on a random singly-linked list."""
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(n)
+    succ = np.full(n, -1, np.int32)
+    for a, b in zip(perm[:-1], perm[1:]):
+        succ[a] = b
+    d = list_rank_dist_to_end(jnp.asarray(succ), jnp.ones(n, bool))
+    expect = np.empty(n, np.int64)
+    expect[perm] = n - 1 - np.arange(n)
+    assert np.array_equal(np.asarray(d), expect)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 25), st.integers(0, 2**31 - 1))
+def test_euler_tour_roots_random_trees(n, seed):
+    """Euler rooting of a random tree = exact parent array of that tree."""
+    rng = np.random.default_rng(seed)
+    parent_ref = np.zeros(n, np.int64)
+    for v in range(1, n):
+        parent_ref[v] = rng.integers(0, v)
+    fu = jnp.asarray(np.arange(1, n), jnp.int32)
+    fv = jnp.asarray(parent_ref[1:], jnp.int32)
+    valid = jnp.ones(n - 1, bool)
+    comp_root = jnp.zeros(n, jnp.int32)
+    parent = np.asarray(euler_tour_root(n, fu, fv, valid, comp_root))
+    assert parent[0] == 0
+    assert np.array_equal(parent[1:], parent_ref[1:])
