@@ -22,3 +22,13 @@ def time_fn(fn, *args, n_runs: int = 5, warmup: int = 1, **kwargs):
 
 def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
+
+
+def rows_to_records(rows: list[str]) -> list[dict]:
+    """Parse ``name,us_per_call,derived`` CSV rows into JSON-able records."""
+    records = []
+    for row in rows:
+        name, us, derived = row.split(",", 2)
+        records.append({"name": name, "us_per_call": float(us),
+                        "derived": derived})
+    return records

@@ -1,20 +1,32 @@
 """Benchmark runner — one section per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows:
-  table2/*   graph statistics (Table II analogue)
-  fig1/*     runtime comparison BFS / PR-RST / GConn+Euler (Fig. 1)
-  fig2/*     spanning-tree depth comparison (Fig. 2)
-  table1/*   measured step counts vs theory (Table I)
-  kernels/*  Pallas kernel micro-benchmarks (interpret mode)
-  roofline/* dry-run roofline terms, if artifacts/dryrun exists (§Roofline)
+  table2/*            graph statistics (Table II analogue)
+  fig1/*              runtime comparison BFS / PR-RST / GConn+Euler (Fig. 1)
+  fig2/*              spanning-tree depth comparison (Fig. 2)
+  table1/*            measured step counts vs theory (Table I)
+  kernels/*           Pallas kernel micro-benchmarks (incl. compress_* engine
+                      rows; interpret mode off-TPU)
+  ablation_compress/* amortized vs per-hop convergence checks (engine k=5
+                      vs k=1, with measured ``jnp.any`` sync counts)
+  ablation_hooking/*  paper's min/max alternation vs pure-min hooking
+  roofline/*          dry-run roofline terms, if artifacts/dryrun exists
+
+Flags:
+  --json PATH   also write all rows as JSON records (machine-readable perf
+                trajectory, e.g. ``--json BENCH_rst.json``)
+  --smoke       one tiny graph per fig/table + small microbenches — fast
+                enough for CI, exercises every perf path
 """
 from __future__ import annotations
 
+import argparse
+import json
 import pathlib
 import sys
 
 
-def kernel_microbench() -> list[str]:
+def kernel_microbench(n: int = 1 << 16) -> list[str]:
     import jax.numpy as jnp
     import numpy as np
 
@@ -25,38 +37,98 @@ def kernel_microbench() -> list[str]:
 
     rng = np.random.default_rng(0)
     rows = []
-    n = 1 << 16
+    tag = f"{n >> 10}k"
     p = jnp.asarray(rng.integers(0, n, n), jnp.int32)
-    rows.append(csv_row("kernels/pointer_jump_64k_x5",
+    rows.append(csv_row(f"kernels/pointer_jump_{tag}_x5",
                         time_fn(pointer_jump_k, p) * 1e6))
     succ = jnp.asarray(np.roll(np.arange(n), -1), jnp.int32).at[-1].set(-1)
     d0 = jnp.ones(n, jnp.int32).at[-1].set(0)
-    rows.append(csv_row("kernels/list_rank_64k_x5",
+    rows.append(csv_row(f"kernels/list_rank_{tag}_x5",
                         time_fn(list_rank_k, succ, d0) * 1e6))
-    idx = jnp.asarray(rng.integers(0, 10_000, (4096, 8)), jnp.int32)
-    tab = jnp.asarray(rng.standard_normal((10_000, 64)), jnp.float32)
-    rows.append(csv_row("kernels/embed_bag_4096x8x64",
+    b = min(4096, max(256, n // 16))   # smoke shrinks this bench too
+    v = min(10_000, 4 * n)
+    idx = jnp.asarray(rng.integers(0, v, (b, 8)), jnp.int32)
+    tab = jnp.asarray(rng.standard_normal((v, 64)), jnp.float32)
+    rows.append(csv_row(f"kernels/embed_bag_{b}x8x64",
                         time_fn(embed_bag, idx, tab) * 1e6))
     return rows
 
 
-def main() -> None:
+def compress_microbench(n: int = 1 << 16) -> list[str]:
+    """Engine rows: full compression on the worst case (a depth-n chain),
+    XLA vs Pallas path, plus the amortized-vs-per-hop sync-count ablation."""
+    import jax.numpy as jnp
+    import numpy as np
+
+    from benchmarks.common import csv_row, time_fn
+    from repro.core.compress import compress_full
+
+    rows = []
+    tag = f"{n >> 10}k"
+    chain = jnp.asarray(np.maximum(np.arange(n) - 1, 0), jnp.int32)
+
+    for label, kwargs in (
+            (f"kernels/compress_full_{tag}_xla", dict()),
+            (f"kernels/compress_full_{tag}_kernel", dict(use_kernel=True)),
+    ):
+        _, syncs = compress_full(chain, return_syncs=True, **kwargs)
+        t = time_fn(compress_full, chain, **kwargs)
+        rows.append(csv_row(label, t * 1e6, f"syncs={int(syncs)}"))
+
+    # Ablation: per-hop (k=1, the seed's hand-rolled loops) vs amortized k=5.
+    for label, k in (("per_hop_k1", 1), ("amortized_k5", 5)):
+        _, syncs = compress_full(chain, n_jumps=k, return_syncs=True)
+        t = time_fn(compress_full, chain, n_jumps=k)
+        rows.append(csv_row(f"ablation_compress/chain_{tag}/{label}",
+                            t * 1e6, f"syncs={int(syncs)}"))
+    return rows
+
+
+def main(argv=None) -> None:
+    parser = argparse.ArgumentParser(description=__doc__)
+    parser.add_argument("--json", metavar="PATH", default=None,
+                        help="also write rows as JSON records")
+    parser.add_argument("--smoke", action="store_true",
+                        help="tiny graphs + small microbenches (CI path)")
+    args = parser.parse_args(argv)
+
     from benchmarks import (ablation_hooking, fig1_runtime, fig2_depth,
                             table1_steps, table2_stats)
+    from benchmarks.common import rows_to_records
+
+    if args.smoke:
+        from repro.data import graphs as G
+        suite = {"smoke_chain_256": G.chain(256),
+                 "smoke_rmat_6": G.rmat(6, edge_factor=4, seed=0)}
+        micro_n = 1 << 12
+    else:
+        suite = None  # modules build the full Table-II suite
+        micro_n = 1 << 16
 
     rows: list[str] = []
-    print("name,us_per_call,derived")
-    for mod in (table2_stats, table1_steps, fig2_depth, fig1_runtime,
-                ablation_hooking):
-        for row in mod.run():
+
+    def emit(new_rows):
+        for row in new_rows:
+            rows.append(row)
             print(row)
             sys.stdout.flush()
-    for row in kernel_microbench():
-        print(row)
+
+    print("name,us_per_call,derived")
+    emit(table2_stats.run(suite))
+    emit(table1_steps.run(suite))
+    emit(fig2_depth.run(suite))
+    emit(fig1_runtime.run(suite))
+    emit(ablation_hooking.run(suite))
+    emit(kernel_microbench(micro_n))
+    emit(compress_microbench(micro_n))
     if pathlib.Path("artifacts/dryrun").exists():
         from benchmarks import roofline
-        for row in roofline.run():
-            print(row)
+        emit(roofline.run())
+
+    if args.json:
+        pathlib.Path(args.json).write_text(
+            json.dumps(rows_to_records(rows), indent=1) + "\n")
+        print(f"# wrote {len(rows)} rows to {args.json}", file=sys.stderr)
 
 
 if __name__ == "__main__":

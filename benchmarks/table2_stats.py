@@ -10,12 +10,12 @@ from repro.core import bfs_rst
 from repro.data.graphs import SUITE, build_suite
 
 
-def run() -> list[str]:
+def run(suite=None) -> list[str]:
     rows = []
-    suite = build_suite()
+    suite = suite or build_suite()
     for name, g in suite.items():
         _, _, levels = bfs_rst(g, 0)
-        regime = SUITE[name][2]
+        regime = SUITE[name][2] if name in SUITE else "smoke"
         rows.append(f"table2/{name},0,V={g.n_nodes};E={g.n_edges};"
                     f"diam~{int(levels)};{regime}")
     return rows

@@ -1,0 +1,7 @@
+#!/usr/bin/env sh
+# Fast perf-path exercise for CI: one tiny graph per fig/table + small
+# microbenches, rows also written to BENCH_rst.json.
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
+    exec python benchmarks/run.py --smoke --json BENCH_rst.json "$@"

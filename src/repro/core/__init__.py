@@ -1,6 +1,8 @@
 """Core library: the paper's rooted-spanning-tree primitives in JAX."""
 from repro.core.graph import Graph, build_csr
 from repro.core.bfs import bfs_rst
+from repro.core.compress import (DEFAULT_JUMPS, compress_full, jump_k,
+                                 rank_to_root, roots_of, wyllie_rank)
 from repro.core.connectivity import connected_components, pointer_jump_full
 from repro.core.euler import euler_tour_root, list_rank_dist_to_end
 from repro.core.pr_rst import pr_rst
@@ -12,4 +14,6 @@ __all__ = [
     "pointer_jump_full", "euler_tour_root", "list_rank_dist_to_end",
     "pr_rst", "METHODS", "RSTResult", "gconn_euler_rst",
     "rooted_spanning_tree", "tree_depth",
+    "DEFAULT_JUMPS", "compress_full", "jump_k", "rank_to_root", "roots_of",
+    "wyllie_rank",
 ]

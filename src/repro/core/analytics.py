@@ -16,22 +16,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core.compress import rank_to_root
+
 
 def depths(parent: jnp.ndarray) -> jnp.ndarray:
-    """int32[n] depth of each vertex (roots = 0). Pointer doubling."""
-    n = parent.shape[0]
-    d = jnp.where(parent == jnp.arange(n, dtype=parent.dtype), 0, 1)
-    d = d.astype(jnp.int32)
-    hop = parent
-
-    def body(state):
-        d, hop, _ = state
-        nd = d + d[hop]
-        nh = hop[hop]
-        return nd, nh, jnp.any(nh != hop)
-
-    d, _, _ = jax.lax.while_loop(lambda s: s[2], body,
-                                 (d, hop, jnp.bool_(True)))
+    """int32[n] depth of each vertex (roots = 0). Engine pointer doubling."""
+    d, _root = rank_to_root(parent)
     return d
 
 

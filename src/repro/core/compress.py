@@ -1,0 +1,210 @@
+"""Unified pointer-compression engine for every O(log n) jump phase.
+
+All three RST pipelines bottom out in pointer doubling over a parent /
+successor table: GConn's shortcutting between hook rounds, PR-RST's
+``roots_of``, Euler/Wyllie list ranking, and the tree-depth diagnostic.
+The seed code paid for each instance separately with a hand-rolled
+``while_loop(any(p[p] != p))`` loop — one device↔host convergence sync per
+*single* doubling step, which is exactly the per-launch overhead the
+paper's 5-jump-per-launch optimization exists to amortize.
+
+This engine is the single home for those loops (DESIGN.md §3):
+
+  * ``jump_k(p, k)``      — k chained doubling steps, zero convergence syncs;
+  * ``compress_full(p)``  — full path compression; ``n_jumps`` doubling steps
+                            are chained between ``jnp.any`` checks, so
+                            convergence costs ⌈log2(depth)/k⌉ + 1 syncs
+                            instead of ⌈log2(depth)⌉ + 1 — in the pure-XLA
+                            path as well as the Pallas-kernel path;
+  * ``roots_of(p)``       — alias of ``compress_full`` (non-destructive:
+                            both are functional);
+  * ``rank_to_root(p)``   — doubling with additive payload on self-rooted
+                            parent arrays → (depth, root) per vertex;
+  * ``wyllie_rank(s, v)`` — list ranking (−1-sentinel successor convention)
+                            with the same amortization.
+
+``interpret=None`` everywhere dispatches from ``jax.default_backend()``:
+compiled Mosaic on TPU, the Pallas interpreter elsewhere. The kernel path
+pads to the (8, 128) tile once, *outside* the convergence loop, and runs
+the whole loop on the padded 2-D table.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+NO_SUCC = jnp.int32(-1)
+
+#: Doubling steps chained between convergence checks (paper's 5-jump trick).
+DEFAULT_JUMPS = 5
+
+
+def default_interpret() -> bool:
+    """Pallas interpret-mode dispatch: compiled on TPU, interpreter elsewhere.
+
+    Single policy shared with every kernel ops wrapper
+    (``repro.kernels.auto_interpret``)."""
+    from repro.kernels import auto_interpret
+    return auto_interpret()
+
+
+def jump_k(p: jnp.ndarray, n_jumps: int = DEFAULT_JUMPS) -> jnp.ndarray:
+    """Apply ``p = p[p]`` ``n_jumps`` times — no convergence check, no sync.
+
+    Each application *doubles* the compressed distance, so ``jump_k``
+    covers chains of depth up to ``2**n_jumps``.
+    """
+    for _ in range(n_jumps):
+        p = p[p]
+    return p
+
+
+@partial(jax.jit, static_argnames=("n_jumps", "use_kernel", "interpret",
+                                   "return_syncs", "max_syncs"))
+def compress_full(p: jnp.ndarray, *, n_jumps: int = DEFAULT_JUMPS,
+                  use_kernel: bool = False, interpret: bool | None = None,
+                  return_syncs: bool = False, max_syncs: int | None = None):
+    """Fully compress ``p`` (every entry ends on its chain's fixed point).
+
+    Amortization contract: the convergence loop performs ``n_jumps``
+    doubling steps per ``jnp.any`` sync, so a table of maximum depth d
+    costs ⌈log2(d)/n_jumps⌉ + 1 syncs (the +1 confirms convergence).
+
+    Args:
+      p: int32[n] parent table; roots self-point. (Cyclic inputs are not
+         trees: odd cycles never converge — pass ``max_syncs`` to bound the
+         loop — and even cycles collapse to *spurious* fixed points that
+         are not roots of the original table; callers validating arbitrary
+         inputs must re-check fixed points against the original ``p``, see
+         ``validate.reaches_root``.)
+      n_jumps: doubling steps chained between convergence checks.
+      use_kernel: route each chained-jump group through the Pallas doubling
+         kernel (one launch per sync); padding is hoisted out of the loop.
+      interpret: Pallas interpret mode; None → ``default_interpret()``.
+      return_syncs: also return the number of ``jnp.any`` convergence
+         checks executed (int32) — the counting hook for tests/benchmarks.
+      max_syncs: optional static bound on convergence checks.
+
+    Returns:
+      compressed table, or ``(compressed, syncs)`` if ``return_syncs``.
+    """
+    if use_kernel:
+        if interpret is None:
+            interpret = default_interpret()
+        from repro.kernels.pointer_jump.ops import (pad_to_tile,
+                                                    pointer_jump_double_k)
+        p2d, n = pad_to_tile(p)
+
+        def step(q):
+            return pointer_jump_double_k(q, n_jumps=n_jumps,
+                                         interpret=interpret)
+    else:
+        p2d, n = p, p.shape[0]
+
+        def step(q):
+            return jump_k(q, n_jumps)
+
+    def body(state):
+        q, _, syncs = state
+        q2 = step(q)
+        return q2, jnp.any(q2 != q), syncs + 1
+
+    def cond(state):
+        _q, changed, syncs = state
+        if max_syncs is not None:
+            changed = changed & (syncs < max_syncs)
+        return changed
+
+    out, _, syncs = jax.lax.while_loop(
+        cond, body, (p2d, jnp.bool_(True), jnp.int32(0)))
+    if use_kernel:
+        out = out.reshape(-1)[:n]
+    return (out, syncs) if return_syncs else out
+
+
+def roots_of(p: jnp.ndarray, **kwargs):
+    """Root of every vertex's chain. Alias of ``compress_full`` (functional,
+    hence non-destructive — callers keep their original ``p``)."""
+    return compress_full(p, **kwargs)
+
+
+@partial(jax.jit, static_argnames=("n_jumps", "return_syncs"))
+def rank_to_root(parent: jnp.ndarray, *, n_jumps: int = DEFAULT_JUMPS,
+                 return_syncs: bool = False):
+    """Pointer doubling with additive payload on a self-rooted parent array.
+
+    Returns ``(depth, root)``: depth[v] = #edges from v to its root,
+    root[v] = the chain's fixed point. Roots carry depth 0 and hop = self,
+    so extra chained steps past convergence are exact no-ops
+    (``depth += depth[root] == 0``).
+    """
+    n = parent.shape[0]
+    depth0 = (parent != jnp.arange(n, dtype=parent.dtype)).astype(jnp.int32)
+
+    def body(state):
+        depth, hop, _, syncs = state
+        for _ in range(n_jumps):
+            depth = depth + depth[hop]
+            hop = hop[hop]
+        return depth, hop, jnp.any(hop != hop[hop]), syncs + 1
+
+    depth, hop, _, syncs = jax.lax.while_loop(
+        lambda s: s[2], body,
+        (depth0, parent, jnp.bool_(True), jnp.int32(0)))
+    return (depth, hop, syncs) if return_syncs else (depth, hop)
+
+
+@partial(jax.jit, static_argnames=("n_jumps", "use_kernel", "interpret",
+                                   "return_syncs"))
+def wyllie_rank(succ: jnp.ndarray, valid: jnp.ndarray, *,
+                n_jumps: int = DEFAULT_JUMPS, use_kernel: bool = False,
+                interpret: bool | None = None, return_syncs: bool = False):
+    """Wyllie list ranking: d[e] = #list elements after e.
+
+    −1-sentinel successor convention (Euler tour lists). The pure-XLA path
+    chains ``n_jumps`` (dist, succ) doubling steps per ``jnp.any`` sync;
+    the kernel path launches the multi-step list_rank Pallas kernel on
+    once-padded 2-D tables. ``return_syncs`` counts convergence checks on
+    both paths.
+    """
+    d0 = jnp.where(valid & (succ != NO_SUCC), 1, 0).astype(jnp.int32)
+
+    if use_kernel:
+        if interpret is None:
+            interpret = default_interpret()
+        from repro.kernels.list_rank.list_rank import list_rank_double_pallas
+        from repro.kernels.list_rank.ops import pad_to_tile
+        succ2d, dist2d, n = pad_to_tile(succ, d0)
+
+        def kbody(state):
+            s, d, syncs = state
+            s2, d2 = list_rank_double_pallas(s, d, n_steps=n_jumps,
+                                             interpret=interpret)
+            return s2, d2, syncs + 1
+
+        def kcond(state):
+            s, _d, _syncs = state
+            return jnp.any(s != NO_SUCC)
+
+        _, dist2d, syncs = jax.lax.while_loop(
+            kcond, kbody, (succ2d, dist2d, jnp.int32(0)))
+        d = dist2d.reshape(-1)[:n]
+        return (d, syncs) if return_syncs else d
+
+    def body(state):
+        d, s, syncs = state
+        for _ in range(n_jumps):
+            has = s != NO_SUCC
+            safe = jnp.where(has, s, 0)
+            d = jnp.where(has, d + d[safe], d)
+            s = jnp.where(has, s[safe], s)
+        return d, s, syncs + 1
+
+    def cond(state):
+        _d, s, _syncs = state
+        return jnp.any(s != NO_SUCC)
+
+    d, _, syncs = jax.lax.while_loop(cond, body, (d0, succ, jnp.int32(0)))
+    return (d, syncs) if return_syncs else d

@@ -27,24 +27,19 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.compress import compress_full
 from repro.core.graph import Graph
 
 INF32 = jnp.iinfo(jnp.int32).max
 
 
 def pointer_jump_full(p: jnp.ndarray, *, use_kernel: bool = False) -> jnp.ndarray:
-    """Jump ``p[i] = p[p[i]]`` until convergence (full path compression)."""
-    if use_kernel:
-        from repro.kernels.pointer_jump.ops import pointer_jump_until_converged
-        return pointer_jump_until_converged(p)
+    """Jump ``p[i] = p[p[i]]`` until convergence (full path compression).
 
-    def body(state):
-        p, _ = state
-        p2 = p[p]
-        return p2, jnp.any(p2 != p)
-
-    p, _ = jax.lax.while_loop(lambda s: s[1], body, (p, jnp.bool_(True)))
-    return p
+    Routed through the unified engine (``core.compress``): amortized
+    convergence checks on both the XLA and Pallas paths.
+    """
+    return compress_full(p, use_kernel=use_kernel)
 
 
 @partial(jax.jit, static_argnames=("max_rounds", "use_kernel", "alternate_hooking"))

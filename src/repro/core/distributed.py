@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.core.compress import compress_full
+
 INF32 = jnp.iinfo(jnp.int32).max
 
 
@@ -54,14 +56,9 @@ def distributed_cc_spanning_forest(mesh: Mesh, axis: str = "data"):
     def step_fn(src, dst, edge_gid, p0):
         n = p0.shape[0]
 
-        def pointer_jump_full(p):
-            def body(state):
-                p, _ = state
-                p2 = p[p]
-                return p2, jnp.any(p2 != p)
-            p, _ = jax.lax.while_loop(lambda s: s[1], body,
-                                      (p, jnp.bool_(True)))
-            return p
+        # Pointer jumping on the replicated table is purely local — route
+        # it through the shared engine (amortized convergence syncs).
+        pointer_jump_full = compress_full
 
         def body(state):
             p, forest, rnd, _ = state

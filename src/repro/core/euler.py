@@ -31,6 +31,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.compress import wyllie_rank
+
 NO_SUCC = jnp.int32(-1)
 
 
@@ -39,35 +41,20 @@ def _lexsort_edges(frm: jnp.ndarray, to: jnp.ndarray) -> jnp.ndarray:
     return jnp.lexsort((to, frm)).astype(jnp.int32)
 
 
-@partial(jax.jit, static_argnames=("use_kernel",))
 def list_rank_dist_to_end(succ: jnp.ndarray, valid: jnp.ndarray,
                           *, use_kernel: bool = False) -> jnp.ndarray:
-    """Wyllie list ranking: d[e] = number of list elements after e."""
-    if use_kernel:
-        from repro.kernels.list_rank.ops import list_rank
-        return list_rank(succ, valid)
+    """Wyllie list ranking: d[e] = number of list elements after e.
 
-    d0 = jnp.where(valid & (succ != NO_SUCC), 1, 0).astype(jnp.int32)
-
-    def body(state):
-        d, s = state
-        has = s != NO_SUCC
-        safe = jnp.where(has, s, 0)
-        d = jnp.where(has, d + d[safe], d)
-        s = jnp.where(has, s[safe], s)
-        return d, s
-
-    def cond(state):
-        _d, s = state
-        return jnp.any(s != NO_SUCC)
-
-    d, _ = jax.lax.while_loop(cond, body, (d0, succ))
-    return d
+    Routed through the unified engine (``core.compress.wyllie_rank``):
+    amortized convergence checks, optional list_rank Pallas kernel.
+    """
+    return wyllie_rank(succ, valid, use_kernel=use_kernel)
 
 
-@partial(jax.jit, static_argnums=(0,))
+@partial(jax.jit, static_argnums=(0,), static_argnames=("use_kernel",))
 def euler_tour_root(n_nodes: int, fu: jnp.ndarray, fv: jnp.ndarray,
-                    valid: jnp.ndarray, comp_root: jnp.ndarray):
+                    valid: jnp.ndarray, comp_root: jnp.ndarray,
+                    *, use_kernel: bool = False):
     """Root a spanning forest by Euler tour.
 
     Args:
@@ -78,6 +65,7 @@ def euler_tour_root(n_nodes: int, fu: jnp.ndarray, fv: jnp.ndarray,
       comp_root: int32[n] — the vertex every component should be rooted at
               (constant within a component; ``comp_root[v] == v`` iff v is
               that component's root).
+      use_kernel: route list ranking through the Pallas list_rank kernel.
 
     Returns:
       parent: int32[n]; ``parent[root] == root`` per component, every other
@@ -127,7 +115,7 @@ def euler_tour_root(n_nodes: int, fu: jnp.ndarray, fv: jnp.ndarray,
     succ = succ.at[cut_idx].set(NO_SUCC, mode="drop")
 
     # Rank; earlier-traversed direction has the larger distance-to-end.
-    d = list_rank_dist_to_end(succ, dvalid)
+    d = list_rank_dist_to_end(succ, dvalid, use_kernel=use_kernel)
 
     # Discovery edge (x → y) ⇒ parent[y] = x.
     de = d[:t]

@@ -24,6 +24,24 @@ GPU→TPU adaptation of the paper's three optimizations (DESIGN.md §2):
   marked vertex, and a second scatter grafts ``P[u] = v``. Fully
   data-parallel, no serial chain walk.
 
+Two memory-traffic optimizations on top (DESIGN.md §3):
+
+* **Incremental representatives** — instead of recomputing ``roots_of(P)``
+  from scratch each round (O(log depth) gathers over the *tree*), the
+  compressed representative array ``rt`` is carried across rounds. A round
+  only changes the root of components that graft, and each moving root m
+  lands in the component of its graft target t — so the per-round update is
+  one pointer compression of the *component-level* overlay
+  ``q[m] = rt[t]`` (chains only as long as this round's graft chains)
+  followed by one gather ``rt' = compress(q)[rt]``. Hook direction is
+  monotone within a round, so the overlay is acyclic.
+
+* **Adaptive doubling tables** — ``_ancestor_tables`` stops as soon as the
+  validity mask saturates (no vertex has depth ≥ 2^k), so each round builds
+  only the ⌈log2(max depth)⌉ levels it actually needs instead of a static
+  ⌈log n⌉ × n × 3 rebuild; ``_mark_paths`` runs its marking loop over the
+  same dynamic level count. Early rounds (shallow forests) build ~0 levels.
+
 The returned P is a spanning tree rooted wherever the last surviving
 component root happened to be; a final path reversal re-roots it at the
 designated root (a one-round reuse of the same machinery).
@@ -35,17 +53,24 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.core.compress import DEFAULT_JUMPS, compress_full
 from repro.core.graph import Graph
 
 INF32 = jnp.iinfo(jnp.int32).max
 
 
 def _ancestor_tables(p: jnp.ndarray, levels: int):
-    """Doubling tables (anc, pred, valid), each [levels, n].
+    """Doubling tables (anc, pred, valid), each [levels, n], plus ``used``.
 
     anc[k][v]  = ancestor of v at distance exactly 2^k (if valid[k][v]).
     pred[k][v] = the path vertex immediately below anc[k][v] on v's root path.
     valid[k][v] = depth(v) >= 2^k.
+
+    Only the first ``used`` levels are populated: the build loop exits as
+    soon as ``valid`` saturates all-false (no vertex is that deep), so a
+    forest of maximum depth D costs ⌈log2(D)⌉ + 1 levels of 3 gathers each
+    rather than the static ⌈log n⌉. Levels ≥ ``used`` are all-invalid and
+    must not be consulted (``_mark_paths`` bounds its loop by ``used``).
     """
     n = p.shape[0]
     v0 = jnp.arange(n, dtype=jnp.int32)
@@ -53,16 +78,27 @@ def _ancestor_tables(p: jnp.ndarray, levels: int):
     pred0 = v0
     valid0 = p != v0
 
-    def step(carry, _):
-        anc, pred, valid = carry
+    bufs0 = (jnp.zeros((levels, n), jnp.int32),
+             jnp.zeros((levels, n), jnp.int32),
+             jnp.zeros((levels, n), jnp.bool_))
+
+    def cond(state):
+        k, _anc, _pred, valid, _bufs = state
+        return (k < levels) & jnp.any(valid)
+
+    def body(state):
+        k, anc, pred, valid, (ab, pb, vb) = state
+        ab = ab.at[k].set(anc)
+        pb = pb.at[k].set(pred)
+        vb = vb.at[k].set(valid)
         anc2 = anc[anc]
         pred2 = pred[anc]
         valid2 = valid & valid[anc]
-        return (anc2, pred2, valid2), (anc, pred, valid)
+        return k + 1, anc2, pred2, valid2, (ab, pb, vb)
 
-    (_, _, _), (ancs, preds, valids) = jax.lax.scan(
-        step, (anc0, pred0, valid0), None, length=levels)
-    return ancs, preds, valids
+    used, _, _, _, (ancs, preds, valids) = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), anc0, pred0, valid0, bufs0))
+    return ancs, preds, valids, used
 
 
 def _mark_paths(p: jnp.ndarray, starts: jnp.ndarray, active: jnp.ndarray,
@@ -73,7 +109,7 @@ def _mark_paths(p: jnp.ndarray, starts: jnp.ndarray, active: jnp.ndarray,
     vertex immediately below w (valid where mark & w is not a start).
     """
     n = p.shape[0]
-    ancs, preds, valids = _ancestor_tables(p, levels)
+    ancs, preds, valids, used = _ancestor_tables(p, levels)
 
     mark = jnp.zeros((n,), jnp.bool_)
     start_idx = jnp.where(active, starts, n)
@@ -90,27 +126,83 @@ def _mark_paths(p: jnp.ndarray, starts: jnp.ndarray, active: jnp.ndarray,
         prednode = prednode.at[tgt].set(pred_k, mode="drop")
         return mark, prednode
 
-    mark, prednode = jax.lax.fori_loop(0, levels, body, (mark, prednode))
+    mark, prednode = jax.lax.fori_loop(0, used, body, (mark, prednode))
     return mark, prednode
 
 
 def _reverse_and_graft(p, mark, prednode, starts, grafts, active):
     """Flip parent pointers along marked paths; set P[start] = graft."""
     n = p.shape[0]
-    verts = jnp.arange(n, dtype=jnp.int32)
     is_start = jnp.zeros((n,), jnp.bool_).at[
         jnp.where(active, starts, n)].set(True, mode="drop")
     flip = mark & ~is_start & (prednode >= 0)
     p = jnp.where(flip, prednode, p)
     p = p.at[jnp.where(active, starts, n)].set(
         jnp.where(active, grafts, 0), mode="drop")
-    del verts
     return p
 
 
-@partial(jax.jit, static_argnames=("max_rounds", "alternate_hooking"))
+def _pr_rst_round(p, rt, rnd, src, dst, *, levels: int,
+                  alternate_hooking: bool = False,
+                  n_jumps: int = DEFAULT_JUMPS, use_kernel: bool = False):
+    """One hook / mark / reverse / graft round.
+
+    Precondition: ``rt == roots_of(p)`` (the incremental-representative
+    invariant; checked by tests/test_compress.py).
+
+    Returns (p_next, rt_next, hooked) with the invariant re-established
+    incrementally: one engine compression of the component-level graft
+    overlay instead of a from-scratch ``roots_of`` over the tree.
+    """
+    n = p.shape[0]
+    m2 = src.shape[0]
+    edge_id = jnp.arange(m2, dtype=jnp.int32)
+    verts = jnp.arange(n, dtype=jnp.int32)
+
+    ru = rt[src]
+    rv = rt[dst]
+    cross = ru != rv
+
+    # Hook direction (see connectivity.py: pure-min by default; the
+    # paper's alternation kept for ablation).
+    use_min = ((rnd % 2) == 0) if alternate_hooking else jnp.bool_(True)
+    mover = jnp.where(use_min, jnp.maximum(ru, rv), jnp.minimum(ru, rv))
+    is_u_mover = mover == ru
+    start = jnp.where(is_u_mover, src, dst)    # u_i — grafted vertex
+    target = jnp.where(is_u_mover, dst, src)   # v_i — graft destination
+
+    # One winning edge per moving component (two-stage scatter-min).
+    key = jnp.where(cross, edge_id, INF32)
+    win = jnp.full((n,), INF32, jnp.int32).at[mover].min(key)
+    is_winner = cross & (win[mover] == edge_id)
+
+    # Per-component (indexed by moving root): start + graft vertices.
+    comp_start = jnp.full((n,), -1, jnp.int32).at[
+        jnp.where(is_winner, mover, n)].set(start, mode="drop")
+    comp_graft = jnp.full((n,), -1, jnp.int32).at[
+        jnp.where(is_winner, mover, n)].set(target, mode="drop")
+    comp_active = comp_start >= 0
+
+    # Mark each moving component's start→root path, reverse, graft.
+    mark, prednode = _mark_paths(p, comp_start, comp_active, levels)
+    p_next = _reverse_and_graft(p, mark, prednode, comp_start, comp_graft,
+                                comp_active)
+
+    # Incremental representative update: moving root m joins the component
+    # of rt[t]; graft chains within a round are monotone in root id, so the
+    # overlay is an acyclic forest over the (much shallower) component graph.
+    graft_root = rt[jnp.clip(comp_graft, 0, n - 1)]
+    overlay = jnp.where(comp_active, graft_root, verts)
+    comp_rt = compress_full(overlay, n_jumps=n_jumps, use_kernel=use_kernel)
+    rt_next = comp_rt[rt]
+    return p_next, rt_next, jnp.any(is_winner)
+
+
+@partial(jax.jit, static_argnames=("max_rounds", "alternate_hooking",
+                                   "use_kernel", "n_jumps"))
 def pr_rst(graph: Graph, root, *, max_rounds: int | None = None,
-           alternate_hooking: bool = False):
+           alternate_hooking: bool = False, use_kernel: bool = False,
+           n_jumps: int = DEFAULT_JUMPS):
     """PR-RST: build a rooted spanning tree in O(log² n) parallel depth.
 
     Returns:
@@ -121,62 +213,26 @@ def pr_rst(graph: Graph, root, *, max_rounds: int | None = None,
     """
     n = graph.n_nodes
     src, dst = graph.src, graph.dst
-    m2 = src.shape[0]
-    edge_id = jnp.arange(m2, dtype=jnp.int32)
     levels = max(1, (n - 1).bit_length())
     root = jnp.asarray(root, jnp.int32)
 
     p0 = jnp.arange(n, dtype=jnp.int32)
 
-    def roots_of(p):
-        """Root of every vertex's tree (non-destructive pointer jumping)."""
-        def body(state):
-            r, _ = state
-            r2 = r[r]
-            return r2, jnp.any(r2 != r)
-        r, _ = jax.lax.while_loop(lambda s: s[1], body, (p, jnp.bool_(True)))
-        return r
-
     def body(state):
-        p, rnd, _ = state
-        rt = roots_of(p)
-        ru = rt[src]
-        rv = rt[dst]
-        cross = ru != rv
-
-        # Hook direction (see connectivity.py: pure-min by default; the
-        # paper's alternation kept for ablation).
-        use_min = ((rnd % 2) == 0) if alternate_hooking else jnp.bool_(True)
-        mover = jnp.where(use_min, jnp.maximum(ru, rv), jnp.minimum(ru, rv))
-        is_u_mover = mover == ru
-        start = jnp.where(is_u_mover, src, dst)    # u_i — grafted vertex
-        target = jnp.where(is_u_mover, dst, src)   # v_i — graft destination
-
-        # One winning edge per moving component (two-stage scatter-min).
-        key = jnp.where(cross, edge_id, INF32)
-        win = jnp.full((n,), INF32, jnp.int32).at[mover].min(key)
-        is_winner = cross & (win[mover] == edge_id)
-
-        # Per-component (indexed by moving root): start + graft vertices.
-        comp_start = jnp.full((n,), -1, jnp.int32).at[
-            jnp.where(is_winner, mover, n)].set(start, mode="drop")
-        comp_graft = jnp.full((n,), -1, jnp.int32).at[
-            jnp.where(is_winner, mover, n)].set(target, mode="drop")
-        comp_active = comp_start >= 0
-
-        # Mark each moving component's start→root path, reverse, graft.
-        mark, prednode = _mark_paths(p, comp_start, comp_active, levels)
-        p = _reverse_and_graft(p, mark, prednode, comp_start, comp_graft,
-                               comp_active)
-        return p, rnd + 1, jnp.any(is_winner)
+        p, rt, rnd, _ = state
+        p, rt, hooked = _pr_rst_round(
+            p, rt, rnd, src, dst, levels=levels,
+            alternate_hooking=alternate_hooking, n_jumps=n_jumps,
+            use_kernel=use_kernel)
+        return p, rt, rnd + 1, hooked
 
     def cond(state):
-        _p, rnd, changed = state
+        _p, _rt, rnd, changed = state
         bound = n if max_rounds is None else max_rounds
         return changed & (rnd < bound)
 
-    p, rounds, _ = jax.lax.while_loop(
-        cond, body, (p0, jnp.int32(0), jnp.bool_(True)))
+    p, _rt, rounds, _ = jax.lax.while_loop(
+        cond, body, (p0, p0, jnp.int32(0), jnp.bool_(True)))
 
     # Final re-root at the designated root: one more path reversal.
     start = jnp.full((n,), -1, jnp.int32).at[0].set(root)

@@ -43,10 +43,15 @@ class RSTResult:
                    rep=rep)
 
 
-def gconn_euler_rst(graph: Graph, root):
-    """Paper's winning pipeline: connectivity → spanning forest → Euler rooting."""
+def gconn_euler_rst(graph: Graph, root, *, use_kernel: bool = False):
+    """Paper's winning pipeline: connectivity → spanning forest → Euler rooting.
+
+    ``use_kernel`` reaches both jump phases: GConn's shortcutting (multi-jump
+    pointer_jump kernel) and the Euler list ranking (list_rank kernel).
+    """
     n = graph.n_nodes
-    rep, forest_mask, rounds = _connected_components(graph)
+    rep, forest_mask, rounds = _connected_components(graph,
+                                                     use_kernel=use_kernel)
 
     # Compact marked half-edges into n-1 fixed slots.
     t = max(n - 1, 1)
@@ -60,43 +65,36 @@ def gconn_euler_rst(graph: Graph, root):
     root = jnp.asarray(root, jnp.int32)
     comp_root = jnp.where(rep == rep[root], root, rep)
 
-    parent = _euler_tour_root(n, fu, fv, valid, comp_root)
+    parent = _euler_tour_root(n, fu, fv, valid, comp_root,
+                              use_kernel=use_kernel)
     return parent, rep, rounds
 
 
 def rooted_spanning_tree(graph: Graph, root, method: Method = "gconn_euler",
-                         **kwargs) -> RSTResult:
+                         *, use_kernel: bool = False, **kwargs) -> RSTResult:
+    """Build a rooted spanning tree with the chosen strategy.
+
+    ``use_kernel`` routes every jump/relax phase of the chosen pipeline
+    through its Pallas kernel (interpret mode off-TPU); the default pure-XLA
+    path shares the same amortized convergence engine (``core.compress``).
+    """
     if method == "bfs":
-        parent, dist, levels = _bfs_rst(graph, root, **kwargs)
+        parent, dist, levels = _bfs_rst(graph, root, use_kernel=use_kernel,
+                                        **kwargs)
         return RSTResult(parent=parent, method=method, steps=levels, dist=dist)
     if method == "gconn_euler":
-        parent, rep, rounds = gconn_euler_rst(graph, root)
+        parent, rep, rounds = gconn_euler_rst(graph, root,
+                                              use_kernel=use_kernel)
         return RSTResult(parent=parent, method=method, steps=rounds, rep=rep)
     if method == "pr_rst":
-        parent, rounds = _pr_rst(graph, root, **kwargs)
+        parent, rounds = _pr_rst(graph, root, use_kernel=use_kernel, **kwargs)
         return RSTResult(parent=parent, method=method, steps=rounds)
     raise ValueError(f"unknown method {method!r}; choose from {METHODS}")
 
 
 def tree_depth(parent: jnp.ndarray) -> jnp.ndarray:
-    """Max depth of the rooted forest (pointer-doubling, O(log n) steps).
+    """Max depth of the rooted forest (engine-routed pointer doubling)."""
+    from repro.core.compress import rank_to_root
 
-    Invariant: ``depth[v]`` = #edges from v to ``hop[v]``; roots carry
-    depth 0 and ``hop = self``, so ``depth + depth[hop]`` is exact.
-    """
-    import jax.lax as lax
-
-    n = parent.shape[0]
-    depth = jnp.where(parent == jnp.arange(n, dtype=parent.dtype), 0, 1)
-    depth = depth.astype(jnp.int32)
-    hop = parent
-
-    def body(state):
-        depth, hop, _ = state
-        nd = depth + depth[hop]
-        nh = hop[hop]
-        return nd, nh, jnp.any(nh != hop)
-
-    depth, hop, _ = lax.while_loop(lambda s: s[2], body,
-                                   (depth, hop, jnp.bool_(True)))
+    depth, _root = rank_to_root(parent)
     return jnp.max(depth)

@@ -14,23 +14,22 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compress import compress_full
 from repro.core.graph import Graph
 
 
 def reaches_root(parent: jnp.ndarray) -> jnp.ndarray:
     """bool[n]: following parents reaches a self-loop (a root)."""
-    hop = jnp.where(parent < 0, jnp.arange(parent.shape[0], dtype=parent.dtype),
-                    parent)
-
-    def body(state):
-        hop, _ = state
-        nh = hop[hop]
-        return nh, jnp.any(nh != hop)
-
-    hop, _ = jax.lax.while_loop(lambda s: s[1], body, (hop, jnp.bool_(True)))
-    # After convergence every chain sits on a fixed point; cycles of length
-    # >1 never converge — bound the loop by running log2(n)+2 extra checks.
-    return hop == hop[hop]
+    mapped = jnp.where(parent < 0,
+                       jnp.arange(parent.shape[0], dtype=parent.dtype),
+                       parent)
+    # Engine compression, bounded: odd cycles never converge (64 syncs ×
+    # 5 doublings covers depth 2^320 — any real chain), and even cycles
+    # collapse to spurious fixed points. A vertex reaches a root iff its
+    # fixed point is a self-loop of the ORIGINAL table — checking against
+    # ``mapped`` (not the compressed hop) rejects cycle-collapse artifacts.
+    hop = compress_full(mapped, max_syncs=64)
+    return mapped[hop] == hop
 
 
 def validate_rst(graph: Graph, parent, root, *, connected: bool = True) -> dict:

@@ -16,3 +16,12 @@ Kernels (all validated in interpret mode on CPU; TPU is the target):
   embed_bag      gather + segment-reduce (recsys embedding bag, GNN message
                  aggregation substrate).
 """
+
+
+def auto_interpret() -> bool:
+    """Shared interpret-mode dispatch: compiled Mosaic on TPU, the Pallas
+    interpreter elsewhere. Every ops wrapper resolves ``interpret=None``
+    through this single policy (see DESIGN.md §3)."""
+    import jax
+
+    return jax.default_backend() != "tpu"

@@ -13,6 +13,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import auto_interpret as _auto_interpret
 from repro.kernels.embed_bag.embed_bag import (BAG_BLOCK, D_TILE,
                                                embed_bag_pallas)
 
@@ -64,8 +65,10 @@ _embed_bag.defvjp(_vjp_fwd, _vjp_bwd)
 @partial(jax.jit, static_argnames=("mean", "interpret"))
 def embed_bag(idx: jnp.ndarray, table: jnp.ndarray,
               weights: jnp.ndarray | None = None, *, mean: bool = False,
-              interpret: bool = True) -> jnp.ndarray:
+              interpret: bool | None = None) -> jnp.ndarray:
     """EmbeddingBag: out[b] = Σ_h w[b,h] · table[idx[b,h]] (or mean)."""
+    if interpret is None:
+        interpret = _auto_interpret()
     b, hot = idx.shape
     if weights is None:
         weights = jnp.ones((b, hot), jnp.float32)

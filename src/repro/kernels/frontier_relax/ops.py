@@ -6,6 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import auto_interpret as _auto_interpret
 from repro.kernels.frontier_relax.frontier_relax import (BLOCK_ROWS, INF32,
                                                          LANES,
                                                          frontier_relax_pallas)
@@ -15,8 +16,10 @@ _TILE = BLOCK_ROWS * LANES
 
 @partial(jax.jit, static_argnames=("interpret",))
 def frontier_relax(dist: jnp.ndarray, src: jnp.ndarray, dst: jnp.ndarray,
-                   level, *, interpret: bool = True) -> jnp.ndarray:
+                   level, *, interpret: bool | None = None) -> jnp.ndarray:
     """bool[E] frontier-expansion mask for one BFS level."""
+    if interpret is None:
+        interpret = _auto_interpret()
     e = src.shape[0]
     e_pad = -e % _TILE
     src2d = jnp.concatenate([src, jnp.zeros((e_pad,), src.dtype)]).reshape(-1, LANES)

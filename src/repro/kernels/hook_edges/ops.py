@@ -6,6 +6,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import auto_interpret as _auto_interpret
 from repro.kernels.hook_edges.hook_edges import (BLOCK_ROWS, LANES,
                                                  hook_edges_pallas)
 
@@ -14,8 +15,10 @@ _TILE = BLOCK_ROWS * LANES
 
 @partial(jax.jit, static_argnames=("n_nodes", "interpret"))
 def hook_edges(src: jnp.ndarray, dst: jnp.ndarray, rep: jnp.ndarray,
-               use_min, *, n_nodes: int, interpret: bool = True):
+               use_min, *, n_nodes: int, interpret: bool | None = None):
     """Per-edge hook proposals (tgt == n_nodes ⇒ drop). See kernel doc."""
+    if interpret is None:
+        interpret = _auto_interpret()
     e = src.shape[0]
     e_pad = -e % _TILE
     # Padding edges are self-loops on node 0 → non-cross → dropped.

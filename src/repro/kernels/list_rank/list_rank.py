@@ -44,6 +44,45 @@ def _list_rank_kernel(succ_blk_ref, dist_blk_ref, succ_full_ref,
     dist_out_ref[...] = dist
 
 
+def _list_rank_double_kernel(succ_ref, dist_ref, succ_out_ref, dist_out_ref,
+                             *, n_steps: int):
+    """k true Wyllie *doubling* steps on the whole VMEM-resident tables.
+
+    Unlike the per-block chain kernel above (fixed table snapshot ⇒ k+1
+    hops per launch), both tables are updated between steps, so each step
+    doubles the covered distance — giving the engine's convergence loop
+    its ⌈log2(n)/k⌉ + 1 sync bound. Runs grid=1 (whole-table update),
+    same VMEM budget as the chain kernel which already broadcasts both
+    full tables to every block.
+    """
+    succ = succ_ref[...].reshape(-1)
+    dist = dist_ref[...].reshape(-1)
+    for _ in range(n_steps):
+        has = succ != NO_SUCC
+        safe = jnp.where(has, succ, 0)
+        dist = dist + jnp.where(has, jnp.take(dist, safe, axis=0), 0)
+        succ = jnp.where(has, jnp.take(succ, safe, axis=0), NO_SUCC)
+    succ_out_ref[...] = succ.reshape(succ_ref.shape)
+    dist_out_ref[...] = dist.reshape(dist_ref.shape)
+
+
+def list_rank_double_pallas(succ2d: jnp.ndarray, dist2d: jnp.ndarray, *,
+                            n_steps: int, interpret: bool = True):
+    rows = succ2d.shape[0]
+    assert succ2d.shape[1] == LANES and rows % BLOCK_ROWS == 0
+    kernel = functools.partial(_list_rank_double_kernel, n_steps=n_steps)
+    full = pl.BlockSpec((rows, LANES), lambda i: (0, 0))
+    return pl.pallas_call(
+        kernel,
+        out_shape=(jax.ShapeDtypeStruct(succ2d.shape, succ2d.dtype),
+                   jax.ShapeDtypeStruct(dist2d.shape, dist2d.dtype)),
+        in_specs=[full, full],
+        out_specs=(full, full),
+        grid=(1,),
+        interpret=interpret,
+    )(succ2d, dist2d)
+
+
 def list_rank_pallas(succ2d: jnp.ndarray, dist2d: jnp.ndarray, *,
                      n_steps: int, interpret: bool = True):
     rows = succ2d.shape[0]

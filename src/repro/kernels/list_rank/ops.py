@@ -1,4 +1,10 @@
-"""jit'd wrappers for the list_rank kernel."""
+"""jit'd wrappers for the list_rank kernel.
+
+``interpret=None`` dispatches via the shared ``repro.kernels.auto_interpret``
+policy. The full-convergence loop lives in the unified engine
+(``core.compress.wyllie_rank``), which pads to the (8, 128) tile once,
+outside the loop, and counts convergence syncs.
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,13 +12,19 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import auto_interpret as _auto_interpret
 from repro.kernels.list_rank.list_rank import (BLOCK_ROWS, LANES, NO_SUCC,
                                                list_rank_pallas)
 
 _TILE = BLOCK_ROWS * LANES
 
 
-def _pad(succ, dist):
+def pad_to_tile(succ, dist):
+    """Pad (succ, dist) to the (8, 128) tile; returns (succ2d, dist2d, n).
+
+    Pad slots are inert (succ = −1, dist = 0), so padding commutes with
+    ranking and can be hoisted outside convergence loops.
+    """
     n = succ.shape[0]
     n_pad = -n % _TILE
     succ2d = jnp.concatenate(
@@ -24,28 +36,19 @@ def _pad(succ, dist):
 
 @partial(jax.jit, static_argnames=("n_steps", "interpret"))
 def list_rank_k(succ: jnp.ndarray, dist: jnp.ndarray, *, n_steps: int = 5,
-                interpret: bool = True):
+                interpret: bool | None = None):
     """One launch: (k+1)-hop chain prefix sum (see kernel docstring)."""
-    succ2d, dist2d, n = _pad(succ, dist)
+    if interpret is None:
+        interpret = _auto_interpret()
+    succ2d, dist2d, n = pad_to_tile(succ, dist)
     s, d = list_rank_pallas(succ2d, dist2d, n_steps=n_steps,
                             interpret=interpret)
     return s.reshape(-1)[:n], d.reshape(-1)[:n]
 
 
-@partial(jax.jit, static_argnames=("n_steps", "interpret"))
 def list_rank(succ: jnp.ndarray, valid: jnp.ndarray, *, n_steps: int = 5,
-              interpret: bool = True) -> jnp.ndarray:
-    """Distance-to-end ranks via repeated multi-step launches."""
-    dist = jnp.where(valid & (succ != NO_SUCC), 1, 0).astype(jnp.int32)
-
-    def body(state):
-        s, d = state
-        s2, d2 = list_rank_k(s, d, n_steps=n_steps, interpret=interpret)
-        return s2, d2
-
-    def cond(state):
-        s, _ = state
-        return jnp.any(s != NO_SUCC)
-
-    _, dist = jax.lax.while_loop(cond, body, (succ, dist))
-    return dist
+              interpret: bool | None = None) -> jnp.ndarray:
+    """Distance-to-end ranks. Back-compat shim → engine convergence loop."""
+    from repro.core.compress import wyllie_rank
+    return wyllie_rank(succ, valid, n_jumps=n_steps, use_kernel=True,
+                       interpret=interpret)

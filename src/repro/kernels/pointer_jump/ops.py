@@ -1,4 +1,11 @@
-"""jit'd wrappers for the pointer_jump kernel (padding + convergence loop)."""
+"""jit'd wrappers for the pointer_jump kernels (padding + launch plumbing).
+
+Convergence looping lives in ``repro.core.compress`` — the unified engine —
+which calls ``pointer_jump_double_k`` on an already-padded table so the
+(8, 128)-tile padding happens once per compression, not once per launch.
+``interpret=None`` dispatches from ``jax.default_backend()`` (compiled on
+TPU, interpreter elsewhere).
+"""
 from __future__ import annotations
 
 from functools import partial
@@ -6,17 +13,22 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.pointer_jump.pointer_jump import (BLOCK_ROWS, LANES,
-                                                     pointer_jump_pallas)
+from repro.kernels import auto_interpret as _auto_interpret
+from repro.kernels.pointer_jump.pointer_jump import (
+    BLOCK_ROWS, LANES, pointer_jump_double_pallas, pointer_jump_pallas)
 
 _TILE = BLOCK_ROWS * LANES
 
 
-def _pad_to_tile(p: jnp.ndarray):
+def pad_to_tile(p: jnp.ndarray):
+    """Pad a flat parent table to the (8, 128) tile; returns (p2d, n).
+
+    Pad entries self-point (inert under jumping), so padding commutes with
+    compression and can be hoisted outside convergence loops.
+    """
     n = p.shape[0]
     n_pad = -n % _TILE
     total = n + n_pad
-    # Pad entries self-point (inert under jumping).
     pad_ids = jnp.arange(n, total, dtype=p.dtype)
     p2d = jnp.concatenate([p, pad_ids]).reshape(-1, LANES)
     return p2d, n
@@ -24,26 +36,40 @@ def _pad_to_tile(p: jnp.ndarray):
 
 @partial(jax.jit, static_argnames=("n_jumps", "interpret"))
 def pointer_jump_k(p: jnp.ndarray, *, n_jumps: int = 5,
-                   interpret: bool = True) -> jnp.ndarray:
+                   interpret: bool | None = None) -> jnp.ndarray:
     """One kernel launch: follow the parent chain ``n_jumps + 1`` hops.
 
     Equivalent to ``ref.pointer_jump_ref(p, n_jumps)`` — the paper's
     multi-jump-per-launch trick (k+1-fold path compression per launch).
     """
-    p2d, n = _pad_to_tile(p)
+    if interpret is None:
+        interpret = _auto_interpret()
+    p2d, n = pad_to_tile(p)
     out = pointer_jump_pallas(p2d, n_jumps=n_jumps, interpret=interpret)
     return out.reshape(-1)[:n]
 
 
 @partial(jax.jit, static_argnames=("n_jumps", "interpret"))
+def pointer_jump_double_k(p2d: jnp.ndarray, *, n_jumps: int = 5,
+                          interpret: bool | None = None) -> jnp.ndarray:
+    """One launch: ``n_jumps`` doubling steps on a padded (R, 128) table.
+
+    The convergence-loop building block: 2^k-fold compression per launch
+    (see ``core.compress.compress_full``). Expects ``pad_to_tile`` layout.
+    """
+    if interpret is None:
+        interpret = _auto_interpret()
+    return pointer_jump_double_pallas(p2d, n_jumps=n_jumps,
+                                      interpret=interpret)
+
+
 def pointer_jump_until_converged(p: jnp.ndarray, *, n_jumps: int = 5,
-                                 interpret: bool = True) -> jnp.ndarray:
-    """Launch the multi-jump kernel until the table is fully compressed."""
+                                 interpret: bool | None = None) -> jnp.ndarray:
+    """Fully compress via the kernel. Back-compat shim → engine.
 
-    def body(state):
-        p, _ = state
-        p2 = pointer_jump_k(p, n_jumps=n_jumps, interpret=interpret)
-        return p2, jnp.any(p2 != p)
-
-    p, _ = jax.lax.while_loop(lambda s: s[1], body, (p, jnp.bool_(True)))
-    return p
+    Pads once, then runs ⌈log2(depth)/n_jumps⌉ + 1 doubling launches with
+    one ``jnp.any`` sync each (``core.compress`` owns the loop).
+    """
+    from repro.core.compress import compress_full
+    return compress_full(p, n_jumps=n_jumps, use_kernel=True,
+                         interpret=interpret)

@@ -1,0 +1,173 @@
+"""Unified pointer-compression engine: equivalence, sync bounds, PR-RST
+incremental-representative regression."""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core.compress import (DEFAULT_JUMPS, compress_full, jump_k,
+                                 rank_to_root, roots_of, wyllie_rank)
+
+rng = np.random.default_rng(7)
+
+
+def naive_compress(p: np.ndarray) -> np.ndarray:
+    """The seed's per-hop loop: p = p[p] until fixpoint (numpy oracle)."""
+    p = p.copy()
+    while (p[p] != p).any():
+        p = p[p]
+    return p
+
+
+def naive_depths(p: np.ndarray) -> np.ndarray:
+    d = np.zeros(p.shape[0], np.int64)
+    for v in range(p.shape[0]):
+        x = v
+        while p[x] != x:
+            x = p[x]
+            d[v] += 1
+    return d
+
+
+def _forests(n=1000):
+    """Parent forests covering the engine's edge cases."""
+    ids = np.arange(n)
+    chain = np.maximum(ids - 1, 0).astype(np.int32)
+    star = np.zeros(n, np.int32)
+    self_loops = ids.astype(np.int32)
+    random_forest = np.where(ids == 0, 0,
+                             rng.integers(0, np.maximum(ids, 1))).astype(np.int32)
+    # Padded tail: forest in the first half, inert self-pointing pad after.
+    padded = random_forest.copy()
+    padded[n // 2:] = ids[n // 2:]
+    return {"chain": chain, "star": star, "self_loops": self_loops,
+            "random_forest": random_forest, "padded_tail": padded}
+
+
+@pytest.mark.parametrize("case", list(_forests(8)))
+@pytest.mark.parametrize("k", [1, 2, 5])
+def test_compress_full_matches_naive(case, k):
+    p_np = _forests(1000)[case]
+    p = jnp.asarray(p_np)
+    expect = naive_compress(p_np)
+    assert_array_equal(np.asarray(compress_full(p, n_jumps=k)), expect)
+    assert_array_equal(np.asarray(roots_of(p, n_jumps=k)), expect)
+
+
+@pytest.mark.parametrize("case", ["chain", "random_forest", "padded_tail"])
+def test_compress_full_kernel_matches_naive(case):
+    # Non-tile-multiple sizes exercise the hoisted padding.
+    for n in (129, 1025):
+        p_np = _forests(n)[case]
+        expect = naive_compress(p_np)
+        out = compress_full(jnp.asarray(p_np), use_kernel=True)
+        assert_array_equal(np.asarray(out), expect)
+
+
+@pytest.mark.parametrize("k", [1, 3, 5])
+def test_jump_k_is_k_doubling_steps(k):
+    p_np = _forests(1000)["random_forest"]
+    expect = p_np.copy()
+    for _ in range(k):
+        expect = expect[expect]
+    assert_array_equal(np.asarray(jump_k(jnp.asarray(p_np), k)), expect)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_sync_count_bound(use_kernel):
+    """Acceptance: ≤ ⌈log2(depth)/k⌉ + 1 convergence syncs, both paths."""
+    n = 4096
+    k = DEFAULT_JUMPS
+    chain = jnp.asarray(np.maximum(np.arange(n) - 1, 0), jnp.int32)
+    out, syncs = compress_full(chain, use_kernel=use_kernel,
+                               return_syncs=True)
+    assert (np.asarray(out) == 0).all()
+    bound = math.ceil(math.log2(n - 1) / k) + 1
+    assert int(syncs) <= bound, (int(syncs), bound)
+    # Amortization is real: the per-hop (k=1) loop needs ~k× more syncs.
+    _, syncs_perhop = compress_full(chain, n_jumps=1, return_syncs=True)
+    assert int(syncs) < int(syncs_perhop)
+
+
+def test_compress_already_converged_costs_one_sync():
+    p = jnp.arange(512, dtype=jnp.int32)
+    out, syncs = compress_full(p, return_syncs=True)
+    assert_array_equal(np.asarray(out), np.arange(512))
+    assert int(syncs) == 1
+
+
+def test_rank_to_root_matches_naive():
+    for case, p_np in _forests(700).items():
+        depth, root = rank_to_root(jnp.asarray(p_np))
+        assert_array_equal(np.asarray(depth), naive_depths(p_np), err_msg=case)
+        assert_array_equal(np.asarray(root), naive_compress(p_np),
+                           err_msg=case)
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_wyllie_rank_counts_syncs(use_kernel):
+    n = 1024
+    perm = rng.permutation(n)
+    succ = np.full(n, -1, np.int32)
+    for a, b in zip(perm[:-1], perm[1:]):
+        succ[a] = b
+    d, syncs = wyllie_rank(jnp.asarray(succ), jnp.ones(n, bool),
+                           use_kernel=use_kernel, return_syncs=True)
+    expect = np.empty(n, np.int64)
+    expect[perm] = n - 1 - np.arange(n)
+    assert_array_equal(np.asarray(d), expect)
+    assert 0 < int(syncs) <= math.ceil(math.log2(n) / DEFAULT_JUMPS) + 1
+
+
+def test_reaches_root_rejects_cycles():
+    from repro.core.validate import reaches_root
+    # 0↔1 is an even cycle (collapses to spurious fixed points under
+    # doubling), 3→4→5→3 an odd cycle (never converges); 2 is a root and
+    # 6 hangs off it; -1 marks an unreachable vertex (treated as root).
+    parent = jnp.asarray([1, 0, 2, 4, 5, 3, 2, -1], jnp.int32)
+    got = np.asarray(reaches_root(parent))
+    assert_array_equal(got, [False, False, True, False, False, False,
+                             True, True])
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+@pytest.mark.parametrize("n", [2, 129, 2000])
+def test_wyllie_rank_random_list(use_kernel, n):
+    perm = rng.permutation(n)
+    succ = np.full(n, -1, np.int32)
+    for a, b in zip(perm[:-1], perm[1:]):
+        succ[a] = b
+    d = wyllie_rank(jnp.asarray(succ), jnp.ones(n, bool),
+                    use_kernel=use_kernel)
+    expect = np.empty(n, np.int64)
+    expect[perm] = n - 1 - np.arange(n)
+    assert_array_equal(np.asarray(d), expect)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("alternate_hooking", [False, True])
+def test_pr_rst_incremental_reps_match_roots_of(seed, alternate_hooking):
+    """Regression: the incrementally maintained representative array equals
+    a from-scratch ``roots_of(p)`` after every hook/reverse round."""
+    from repro.core.graph import Graph
+    from repro.core.pr_rst import _pr_rst_round
+
+    r = np.random.default_rng(seed)
+    n = 120
+    edges = np.stack([r.integers(0, n, 300), r.integers(0, n, 300)], 1)
+    g = Graph.from_numpy_undirected(n, edges)
+    levels = max(1, (n - 1).bit_length())
+
+    p = jnp.arange(n, dtype=jnp.int32)
+    rt = p
+    for rnd in range(n):
+        assert_array_equal(np.asarray(rt), np.asarray(roots_of(p)),
+                           err_msg=f"round {rnd}")
+        p, rt, hooked = _pr_rst_round(p, rt, jnp.int32(rnd), g.src, g.dst,
+                                      levels=levels,
+                                      alternate_hooking=alternate_hooking)
+        if not bool(hooked):
+            break
+    assert_array_equal(np.asarray(rt), np.asarray(roots_of(p)))

@@ -1,6 +1,9 @@
 """Property-based tests (hypothesis): RST invariants on random graphs."""
 import numpy as np
 import jax.numpy as jnp
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Graph, connected_components, rooted_spanning_tree)
