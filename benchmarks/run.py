@@ -5,6 +5,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   fig1/*              runtime comparison BFS / PR-RST / GConn+Euler (Fig. 1)
   fig2/*              spanning-tree depth comparison (Fig. 2)
   table1/*            measured step counts vs theory (Table I)
+  table3/*            downstream biconnectivity cost per RST flavor
+                      (the Tarjan–Vishkin layer, DESIGN.md §4)
   kernels/*           Pallas kernel micro-benchmarks (incl. compress_* engine
                       rows; interpret mode off-TPU)
   ablation_compress/* amortized vs per-hop convergence checks (engine k=5
@@ -93,7 +95,7 @@ def main(argv=None) -> None:
     args = parser.parse_args(argv)
 
     from benchmarks import (ablation_hooking, fig1_runtime, fig2_depth,
-                            table1_steps, table2_stats)
+                            table1_steps, table2_stats, table3_bcc)
     from benchmarks.common import rows_to_records
 
     if args.smoke:
@@ -118,6 +120,7 @@ def main(argv=None) -> None:
     emit(table1_steps.run(suite))
     emit(fig2_depth.run(suite))
     emit(fig1_runtime.run(suite))
+    emit(table3_bcc.run(suite))
     emit(ablation_hooking.run(suite))
     emit(kernel_microbench(micro_n))
     emit(compress_microbench(micro_n))

@@ -1,0 +1,45 @@
+"""Table III (extension): downstream biconnectivity cost per RST flavor.
+
+The paper compares the three RST pipelines in isolation; this table
+extends the comparison one level up the stack to the workload the paper
+cites as the motivation — Tarjan–Vishkin biconnectivity (``core/bcc.py``,
+DESIGN.md §4). Rows:
+
+  table3/{graph}/{flavor} — end-to-end biconnectivity runtime with the
+  given ``rst_flavor`` building the spanning tree, plus derived counts
+  (n_bcc / articulation points / bridges / rst steps / aux GConn rounds).
+
+Tree shape feeds the downstream cost two ways: the tour numbering ranks
+the same 2(n−1) slots regardless, but deeper trees push more work into
+the aux-graph GConn pass, and BFS's Θ(diameter) build dominates on
+high-diameter graphs — the Fig. 1/Fig. 2 trade-off, measured downstream.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.core.bcc import biconnectivity
+from repro.core.rst import METHODS
+from repro.data.graphs import build_suite
+
+
+def run(suite=None) -> list[str]:
+    rows = []
+    suite = suite or build_suite()
+    for name, g in suite.items():
+        for flavor in METHODS:
+            res = biconnectivity(g, 0, rst_flavor=flavor)
+            t = time_fn(biconnectivity, g, 0, rst_flavor=flavor)
+            n_art = int(np.asarray(res.articulation).sum())
+            n_bridge = int(np.asarray(res.bridge).sum()) // 2
+            rows.append(csv_row(
+                f"table3/{name}/{flavor}", t * 1e6,
+                f"n_bcc={int(res.n_bcc)};n_art={n_art};"
+                f"n_bridge={n_bridge};rst_steps={int(res.rst_steps)};"
+                f"aux_rounds={int(res.aux_rounds)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,7 +1,15 @@
 #!/usr/bin/env sh
 # Fast perf-path exercise for CI: one tiny graph per fig/table + small
-# microbenches, rows also written to BENCH_rst.json.
+# microbenches, rows also written to BENCH_rst.json. Asserts the
+# biconnectivity rows (table3/*, DESIGN.md §4) actually landed so the
+# downstream layer can't silently drop out of the perf trajectory.
 set -e
 cd "$(dirname "$0")/.."
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
-    exec python benchmarks/run.py --smoke --json BENCH_rst.json "$@"
+    python benchmarks/run.py --smoke --json BENCH_rst.json "$@"
+
+if ! grep -q '"name": "table3/' BENCH_rst.json; then
+    echo "bench_smoke: no table3/* biconnectivity row in BENCH_rst.json" >&2
+    exit 1
+fi
+echo "bench_smoke: ok (table3 smoke rows present)"

@@ -1,0 +1,28 @@
+#!/usr/bin/env sh
+# Docs CI: every in-code `DESIGN.md §N` / `DESIGN §N` citation must resolve
+# to a `## §N` section heading in DESIGN.md (the file is the contract the
+# citations refer to — renumbering it without fixing callers fails here).
+set -e
+cd "$(dirname "$0")/.."
+
+cited=$(grep -rhoE 'DESIGN(\.md)? §[0-9]+' \
+            src benchmarks tests examples scripts README.md 2>/dev/null \
+        | grep -oE '[0-9]+' | sort -un)
+if [ -z "$cited" ]; then
+    echo "check_docs: no DESIGN.md § citations found (suspicious)" >&2
+    exit 1
+fi
+
+missing=0
+for n in $cited; do
+    if ! grep -qE "^## §$n( |$)" DESIGN.md; then
+        echo "check_docs: DESIGN.md §$n is cited in code but has no" \
+             "'## §$n' section in DESIGN.md" >&2
+        missing=1
+    fi
+done
+
+if [ "$missing" -eq 0 ]; then
+    echo "check_docs: all cited DESIGN.md sections ($(echo "$cited" | tr '\n' ' ')) resolve"
+fi
+exit "$missing"

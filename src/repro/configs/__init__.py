@@ -55,7 +55,7 @@ LM_SHAPES = {
     "decode_32k": dict(kind="decode", batch=128, seq=32768),
     # Decode cost is linear in KV length (one query token); the spec's
     # full-attention skip applies to quadratic *prefill*, so we run this
-    # cell with a sequence-sharded KV cache (DESIGN.md §6).
+    # cell with a sequence-sharded KV cache (DESIGN.md §7).
     "long_500k": dict(kind="decode", batch=1, seq=524288),
 }
 

@@ -17,4 +17,4 @@ def get():
     return ArchSpec(arch_id="schnet", family="gnn", make_config=make_config,
                     make_smoke_config=make_smoke_config, shapes=GNN_SHAPES,
                     notes="triplet-free cfconv; positions synthesized for "
-                          "non-molecular shapes (DESIGN §6)")
+                          "non-molecular shapes (DESIGN §7)")

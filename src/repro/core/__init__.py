@@ -1,10 +1,13 @@
 """Core library: the paper's rooted-spanning-tree primitives in JAX."""
 from repro.core.graph import Graph, build_csr
+from repro.core.bcc import BCCResult, bcc_batch, bcc_from_parent, biconnectivity
 from repro.core.bfs import bfs_rst
 from repro.core.compress import (DEFAULT_JUMPS, compress_full, jump_k,
-                                 rank_to_root, roots_of, wyllie_rank)
+                                 rank_to_root, reduce_to_root, roots_of,
+                                 segment_reduce, wyllie_rank)
 from repro.core.connectivity import connected_components, pointer_jump_full
-from repro.core.euler import euler_tour_root, list_rank_dist_to_end
+from repro.core.euler import (TourNumbering, euler_tour_root,
+                              list_rank_dist_to_end, tour_numbering)
 from repro.core.pr_rst import pr_rst
 from repro.core.rst import (METHODS, RSTResult, gconn_euler_rst,
                             rooted_spanning_tree, tree_depth)
@@ -12,8 +15,10 @@ from repro.core.rst import (METHODS, RSTResult, gconn_euler_rst,
 __all__ = [
     "Graph", "build_csr", "bfs_rst", "connected_components",
     "pointer_jump_full", "euler_tour_root", "list_rank_dist_to_end",
+    "TourNumbering", "tour_numbering",
+    "BCCResult", "bcc_batch", "bcc_from_parent", "biconnectivity",
     "pr_rst", "METHODS", "RSTResult", "gconn_euler_rst",
     "rooted_spanning_tree", "tree_depth",
-    "DEFAULT_JUMPS", "compress_full", "jump_k", "rank_to_root", "roots_of",
-    "wyllie_rank",
+    "DEFAULT_JUMPS", "compress_full", "jump_k", "rank_to_root",
+    "reduce_to_root", "roots_of", "segment_reduce", "wyllie_rank",
 ]

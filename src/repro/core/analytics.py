@@ -2,14 +2,17 @@
 
 The paper motivates RSTs as the substrate for biconnectivity, ear
 decomposition, etc. This module provides the two classic Euler-tour /
-pointer-doubling consumers, built on the same primitives:
+pointer-doubling consumers, built on the engine primitives
+(DESIGN.md §3); the full biconnectivity consumer they anticipate lives in
+``core/bcc.py`` (DESIGN.md §4):
 
-  * ``subtree_sizes(parent)`` — |subtree(v)| for every v, via pointer
-    doubling with additive payload (the Tarjan–Vishkin building block for
-    low/high computation in biconnectivity);
+  * ``subtree_sizes(parent)`` — |subtree(v)| for every v (the
+    Tarjan–Vishkin low/high building block; ``bcc.py`` obtains the same
+    quantity in O(log n) depth from ``euler.tour_numbering``, this
+    level-synchronous variant exists for the depth-cost comparison);
   * ``depths(parent)`` — exact depth of every vertex (not just the max).
 
-Both are O(log n) parallel depth, jit-compatible, fixed-shape.
+Both are jit-compatible and fixed-shape.
 """
 from __future__ import annotations
 
@@ -20,20 +23,38 @@ from repro.core.compress import rank_to_root
 
 
 def depths(parent: jnp.ndarray) -> jnp.ndarray:
-    """int32[n] depth of each vertex (roots = 0). Engine pointer doubling."""
+    """Depth of each vertex from its root.
+
+    Engine pointer doubling (``compress.rank_to_root``, DESIGN.md §3):
+    O(log depth) parallel steps with amortized convergence syncs.
+
+    Args:
+      parent: int32[n] self-rooted acyclic parent table.
+
+    Returns:
+      int32[n] depths; roots (and isolated vertices) carry 0.
+    """
     d, _root = rank_to_root(parent)
     return d
 
 
 def subtree_sizes(parent: jnp.ndarray) -> jnp.ndarray:
-    """int32[n]: number of vertices in v's subtree (incl. v).
+    """Number of vertices in v's subtree (including v itself).
 
     Level-synchronous bottom-up aggregation driven by depths: vertices are
     processed from the deepest level upward; each level is one masked
     scatter-add into the parents. O(depth) steps like BFS — the
     depth-performance trade-off the paper measures (Fig. 2) applies to
     downstream consumers too, which is why we report tree depth per
-    method in fig2_depth.
+    method in fig2_depth. The biconnectivity layer needs the same
+    quantity in O(log n) depth regardless of tree shape and gets it from
+    the Euler tour instead (``euler.tour_numbering``, DESIGN.md §4).
+
+    Args:
+      parent: int32[n] self-rooted acyclic parent table.
+
+    Returns:
+      int32[n] subtree sizes; leaves carry 1, a root its component size.
     """
     n = parent.shape[0]
     dep = depths(parent)

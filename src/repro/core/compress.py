@@ -18,8 +18,15 @@ This engine is the single home for those loops (DESIGN.md §3):
                             path as well as the Pallas-kernel path;
   * ``roots_of(p)``       — alias of ``compress_full`` (non-destructive:
                             both are functional);
-  * ``rank_to_root(p)``   — doubling with additive payload on self-rooted
-                            parent arrays → (depth, root) per vertex;
+  * ``reduce_to_root(p, x, op)`` — doubling with a payload combine (add /
+                            min / max) → (op over each v→root path, root);
+  * ``rank_to_root(p)``   — the ``op="add"``, unit-payload instance →
+                            (depth, root) per vertex;
+  * ``segment_reduce(a, lo, hi, op)`` — idempotent range reduction via a
+                            doubling sparse table (payload-reduce ``jump_k``
+                            on the shift successor i ↦ i + 2^k) — the
+                            subtree low/high primitive for biconnectivity
+                            (DESIGN.md §4);
   * ``wyllie_rank(s, v)`` — list ranking (−1-sentinel successor convention)
                             with the same amortization.
 
@@ -54,7 +61,14 @@ def jump_k(p: jnp.ndarray, n_jumps: int = DEFAULT_JUMPS) -> jnp.ndarray:
     """Apply ``p = p[p]`` ``n_jumps`` times — no convergence check, no sync.
 
     Each application *doubles* the compressed distance, so ``jump_k``
-    covers chains of depth up to ``2**n_jumps``.
+    covers chains of depth up to ``2**n_jumps`` (DESIGN.md §3).
+
+    Args:
+      p: int32[n] parent table (roots self-point).
+      n_jumps: number of chained doubling steps.
+
+    Returns:
+      int32[n] jumped table (functional — ``p`` is unchanged).
     """
     for _ in range(n_jumps):
         p = p[p]
@@ -125,9 +139,62 @@ def compress_full(p: jnp.ndarray, *, n_jumps: int = DEFAULT_JUMPS,
 
 
 def roots_of(p: jnp.ndarray, **kwargs):
-    """Root of every vertex's chain. Alias of ``compress_full`` (functional,
-    hence non-destructive — callers keep their original ``p``)."""
+    """int32[n] root of every vertex's chain (DESIGN.md §3).
+
+    Alias of ``compress_full`` (functional, hence non-destructive —
+    callers keep their original ``p``); same kwargs and sync contract.
+    """
     return compress_full(p, **kwargs)
+
+
+_COMBINE = {"add": jnp.add, "min": jnp.minimum, "max": jnp.maximum}
+
+
+@partial(jax.jit, static_argnames=("op", "n_jumps", "return_syncs"))
+def reduce_to_root(parent: jnp.ndarray, payload: jnp.ndarray,
+                   op: str = "add", *, n_jumps: int = DEFAULT_JUMPS,
+                   return_syncs: bool = False):
+    """Pointer doubling with a payload combine along every v→root path.
+
+    The payload-reduce generalization of ``rank_to_root`` (DESIGN.md §3):
+    the same ⌈log2(depth)/n_jumps⌉ + 1 sync contract, but each doubling
+    step also folds the payload of the jumped-over segment, so the result
+    is ``op`` over all vertices on the path from v to its root
+    (inclusive of both endpoints).
+
+    Args:
+      parent: int32[n] self-rooted parent table (roots self-point; must be
+        acyclic — this is a forest primitive, not a validator).
+      payload: [n] per-vertex values, any dtype ``op`` supports. For
+        ``op="add"`` the payload at roots must be the additive identity
+        (0): doubling steps past convergence re-fold ``payload[root]``,
+        which is a no-op only for idempotent ops (min/max) or identity
+        payloads. ``rank_to_root`` satisfies this by construction.
+      op: "add" | "min" | "max".
+      n_jumps: doubling steps chained between convergence checks.
+      return_syncs: also return the ``jnp.any`` convergence-check count.
+
+    Returns:
+      ``(red, root)`` — red[v] = op over payload on v's root path,
+      root[v] = the chain's fixed point; plus ``syncs`` if requested.
+    """
+    combine = _COMBINE[op]
+
+    def body(state):
+        red, hop, _, syncs = state
+        for _ in range(n_jumps):
+            red = combine(red, red[hop])
+            hop = hop[hop]
+        return red, hop, jnp.any(hop != hop[hop]), syncs + 1
+
+    red, hop, _, syncs = jax.lax.while_loop(
+        lambda s: s[2], body,
+        (payload, parent, jnp.bool_(True), jnp.int32(0)))
+    # Uniform inclusive-of-root semantics: the loop may exit with red[v]
+    # covering [v, root) only; one more fold of red[hop] (= payload[root],
+    # stable at the fixed point) closes the interval for every vertex.
+    red = combine(red, red[hop])
+    return (red, hop, syncs) if return_syncs else (red, hop)
 
 
 @partial(jax.jit, static_argnames=("n_jumps", "return_syncs"))
@@ -135,25 +202,67 @@ def rank_to_root(parent: jnp.ndarray, *, n_jumps: int = DEFAULT_JUMPS,
                  return_syncs: bool = False):
     """Pointer doubling with additive payload on a self-rooted parent array.
 
-    Returns ``(depth, root)``: depth[v] = #edges from v to its root,
-    root[v] = the chain's fixed point. Roots carry depth 0 and hop = self,
-    so extra chained steps past convergence are exact no-ops
-    (``depth += depth[root] == 0``).
+    The unit-payload ``op="add"`` instance of ``reduce_to_root``
+    (DESIGN.md §3). Returns ``(depth, root)``: depth[v] = int32 #edges
+    from v to its root, root[v] = the chain's fixed point. Roots carry
+    depth 0 and hop = self, so extra chained steps past convergence are
+    exact no-ops (``depth += depth[root] == 0``).
+
+    Args:
+      parent: int32[n] self-rooted acyclic parent table.
     """
     n = parent.shape[0]
     depth0 = (parent != jnp.arange(n, dtype=parent.dtype)).astype(jnp.int32)
+    return reduce_to_root(parent, depth0, "add", n_jumps=n_jumps,
+                          return_syncs=return_syncs)
 
-    def body(state):
-        depth, hop, _, syncs = state
-        for _ in range(n_jumps):
-            depth = depth + depth[hop]
-            hop = hop[hop]
-        return depth, hop, jnp.any(hop != hop[hop]), syncs + 1
 
-    depth, hop, _, syncs = jax.lax.while_loop(
-        lambda s: s[2], body,
-        (depth0, parent, jnp.bool_(True), jnp.int32(0)))
-    return (depth, hop, syncs) if return_syncs else (depth, hop)
+@partial(jax.jit, static_argnames=("op",))
+def segment_reduce(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
+                   op: str = "min"):
+    """Idempotent range reduction: out[q] = op over values[lo[q] .. hi[q]].
+
+    The payload-reduce analogue of ``jump_k`` on the shift successor
+    ``i ↦ i + 2^k``: level k of the doubling (sparse) table holds
+    ``T[k][i] = op over values[i : i + 2^k]``, built in ⌈log2 n⌉ chained
+    doubling steps with zero convergence syncs (the table is
+    depth-oblivious). Each query folds the two power-of-two segments
+    covering [lo, hi] — which double-count their overlap, hence the
+    idempotency requirement. This is the subtree low/high primitive for
+    the biconnectivity layer (DESIGN.md §4): with ``values`` laid out in
+    preorder, subtree(v) is the contiguous query
+    ``[pre[v], pre[v] + size[v] - 1]``.
+
+    Args:
+      values: [n] array, any dtype ``op`` supports.
+      lo, hi: int32[q] inclusive query bounds, ``0 <= lo <= hi < n``.
+      op: "min" | "max" (idempotent ops only — "add" would double-count).
+
+    Returns:
+      [q] array of per-query reductions, same dtype as ``values``.
+    """
+    if op not in ("min", "max"):
+        raise ValueError(f"segment_reduce needs an idempotent op, got {op!r}")
+    combine = _COMBINE[op]
+    n = values.shape[0]
+    levels = max(1, (n - 1).bit_length())
+    idx = jnp.arange(n, dtype=jnp.int32)
+    rows = [values]
+    t = values
+    for k in range(levels):
+        # Clamp at the boundary: T[k][n-1] covers {n-1} ⊆ any suffix, so
+        # folding it in is an idempotent no-op (add would be wrong here).
+        t = combine(t, t[jnp.minimum(idx + (1 << k), n - 1)])
+        rows.append(t)
+    table = jnp.stack(rows)                      # [levels+1, n]
+
+    length = hi - lo + 1
+    # k = floor(log2(length)), int-exact (no float log at segment bounds).
+    k = jnp.zeros_like(length)
+    for j in range(1, levels + 1):
+        k = k + (length >= (1 << j)).astype(length.dtype)
+    span = jnp.left_shift(jnp.int32(1), k)       # 2^k <= length < 2^(k+1)
+    return combine(table[k, lo], table[k, jnp.maximum(hi - span + 1, lo)])
 
 
 @partial(jax.jit, static_argnames=("n_jumps", "use_kernel", "interpret",
@@ -161,13 +270,21 @@ def rank_to_root(parent: jnp.ndarray, *, n_jumps: int = DEFAULT_JUMPS,
 def wyllie_rank(succ: jnp.ndarray, valid: jnp.ndarray, *,
                 n_jumps: int = DEFAULT_JUMPS, use_kernel: bool = False,
                 interpret: bool | None = None, return_syncs: bool = False):
-    """Wyllie list ranking: d[e] = #list elements after e.
+    """Wyllie list ranking: d[e] = #list elements after e (DESIGN.md §3).
 
     −1-sentinel successor convention (Euler tour lists). The pure-XLA path
     chains ``n_jumps`` (dist, succ) doubling steps per ``jnp.any`` sync;
     the kernel path launches the multi-step list_rank Pallas kernel on
     once-padded 2-D tables. ``return_syncs`` counts convergence checks on
     both paths.
+
+    Args:
+      succ: int32[n] successor table; −1 terminates a list. Disjoint lists
+        (one per Euler-tour component) rank independently.
+      valid: bool[n] slot validity (padding slots rank 0).
+
+    Returns:
+      int32[n] distances to each element's own list end, or ``(d, syncs)``.
     """
     d0 = jnp.where(valid & (succ != NO_SUCC), 1, 0).astype(jnp.int32)
 

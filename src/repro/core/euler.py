@@ -23,15 +23,21 @@ a designated root per component in O(log n) parallel depth:
 
 All shapes are static: the forest is padded to ``n - 1`` slots with
 ``from = n`` sentinels which sort to the tail and stay inert.
+
+Besides rooting (``euler_tour_root``), the module exposes the tour's
+*numbering* (``tour_numbering``): dense first-visit (preorder) numbers and
+subtree sizes for an already-rooted parent array — the substrate the
+biconnectivity layer's subtree-interval queries stand on (DESIGN.md §4).
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.compress import wyllie_rank
+from repro.core.compress import roots_of, wyllie_rank
 
 NO_SUCC = jnp.int32(-1)
 
@@ -51,28 +57,14 @@ def list_rank_dist_to_end(succ: jnp.ndarray, valid: jnp.ndarray,
     return wyllie_rank(succ, valid, use_kernel=use_kernel)
 
 
-@partial(jax.jit, static_argnums=(0,), static_argnames=("use_kernel",))
-def euler_tour_root(n_nodes: int, fu: jnp.ndarray, fv: jnp.ndarray,
-                    valid: jnp.ndarray, comp_root: jnp.ndarray,
-                    *, use_kernel: bool = False):
-    """Root a spanning forest by Euler tour.
+def _tour_successors(n: int, fu: jnp.ndarray, fv: jnp.ndarray,
+                     valid: jnp.ndarray, comp_root: jnp.ndarray):
+    """Steps 1–4 shared by rooting and numbering: build the Euler lists.
 
-    Args:
-      n_nodes: number of vertices n (static via shapes).
-      fu, fv: int32[T] forest edge endpoints (T slots, typically n-1);
-              padding slots must carry ``fu == fv == n_nodes``.
-      valid: bool[T] slot validity.
-      comp_root: int32[n] — the vertex every component should be rooted at
-              (constant within a component; ``comp_root[v] == v`` iff v is
-              that component's root).
-      use_kernel: route list ranking through the Pallas list_rank kernel.
-
-    Returns:
-      parent: int32[n]; ``parent[root] == root`` per component, every other
-              vertex in a non-trivial component points at its tree parent;
-              isolated vertices point at themselves.
+    Returns ``(succ, dvalid)`` over the 2T directed slots (slot e < T is
+    direction fu[e]→fv[e], slot e + T its reverse): the −1-terminated Euler
+    successor lists, one per component, each cut at its ``comp_root``.
     """
-    n = n_nodes
     t = fu.shape[0]
     sentinel = jnp.int32(n)
 
@@ -113,6 +105,34 @@ def euler_tour_root(n_nodes: int, fu: jnp.ndarray, fv: jnp.ndarray,
     cut_edge = rev[last_edge]
     cut_idx = jnp.where(do_cut, cut_edge, m2)  # m2 → dropped
     succ = succ.at[cut_idx].set(NO_SUCC, mode="drop")
+    return succ, dvalid
+
+
+@partial(jax.jit, static_argnums=(0,), static_argnames=("use_kernel",))
+def euler_tour_root(n_nodes: int, fu: jnp.ndarray, fv: jnp.ndarray,
+                    valid: jnp.ndarray, comp_root: jnp.ndarray,
+                    *, use_kernel: bool = False):
+    """Root a spanning forest by Euler tour.
+
+    Args:
+      n_nodes: number of vertices n (static via shapes).
+      fu, fv: int32[T] forest edge endpoints (T slots, typically n-1);
+              padding slots must carry ``fu == fv == n_nodes``.
+      valid: bool[T] slot validity.
+      comp_root: int32[n] — the vertex every component should be rooted at
+              (constant within a component; ``comp_root[v] == v`` iff v is
+              that component's root).
+      use_kernel: route list ranking through the Pallas list_rank kernel.
+
+    Returns:
+      parent: int32[n]; ``parent[root] == root`` per component, every other
+              vertex in a non-trivial component points at its tree parent;
+              isolated vertices point at themselves.
+    """
+    n = n_nodes
+    t = fu.shape[0]
+    sentinel = jnp.int32(n)
+    succ, dvalid = _tour_successors(n, fu, fv, valid, comp_root)
 
     # Rank; earlier-traversed direction has the larger distance-to-end.
     d = list_rank_dist_to_end(succ, dvalid, use_kernel=use_kernel)
@@ -128,3 +148,89 @@ def euler_tour_root(n_nodes: int, fu: jnp.ndarray, fv: jnp.ndarray,
     parent = jnp.arange(n, dtype=jnp.int32)
     parent = parent.at[child].set(par, mode="drop")
     return parent
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class TourNumbering:
+    """Euler-tour first/last-visit numbering of a rooted forest.
+
+    Attributes (all int32[n], DESIGN.md §4):
+      pre:    dense preorder — components occupy contiguous index blocks,
+              and subtree(v) is exactly the interval
+              ``[pre[v], pre[v] + size[v])``.
+      size:   |subtree(v)| including v.
+      last:   ``pre[v] + size[v] - 1`` — preorder number of v's last
+              (deepest-last-visited) descendant.
+      comp:   component root of every vertex (``comp[v] == v`` iff root).
+      parent: the canonicalized parent table the numbering was built from
+              (negative entries replaced by self-loops).
+    """
+
+    pre: jnp.ndarray
+    size: jnp.ndarray
+    last: jnp.ndarray
+    comp: jnp.ndarray
+    parent: jnp.ndarray
+
+    def tree_flatten(self):
+        return (self.pre, self.size, self.last, self.comp, self.parent), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        return cls(*children)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def tour_numbering(parent: jnp.ndarray, *,
+                   use_kernel: bool = False) -> TourNumbering:
+    """First/last-visit numbering of a rooted forest's Euler tour.
+
+    Consumes the parent array of *any* RST pipeline (BFS / GConn+Euler /
+    PR-RST) and exposes the tour positions the rooting path discards: the
+    tour of each component, started at its root, visits vertices in DFS
+    preorder, so ranking the 2n directed tree-edge slots (one slot per
+    vertex, invalid at roots) once (engine ``wyllie_rank``) yields
+    discovery order, and the gap between a vertex's discovery edge and
+    its closing edge yields its subtree size —
+    ``size[v] = (d_down − d_up + 1) / 2`` (DESIGN.md §4).
+
+    Args:
+      parent: int32[n] parent table. Roots self-point; negative entries
+        (BFS's unreachable −1) are treated as self-rooted singletons.
+      use_kernel: route list ranking through the Pallas list_rank kernel.
+
+    Returns:
+      TourNumbering (pre / size / last / comp / parent, all int32[n]).
+    """
+    n = parent.shape[0]
+    verts = jnp.arange(n, dtype=jnp.int32)
+    par = jnp.where(parent < 0, verts, parent.astype(jnp.int32))
+    nonroot = par != verts
+    comp = roots_of(par)
+
+    # One tree-edge slot per vertex: slot v = (v, parent[v]), invalid at
+    # roots. Directed slot v is the closing edge v→parent ("up"), slot
+    # n + v the discovery edge parent→v ("down").
+    sentinel = jnp.int32(n)
+    fu = jnp.where(nonroot, verts, sentinel)
+    fv = jnp.where(nonroot, par, sentinel)
+    succ, dvalid = _tour_successors(n, fu, fv, nonroot, comp)
+    d = wyllie_rank(succ, dvalid, use_kernel=use_kernel)
+    d_up, d_down = d[:n], d[n:]
+
+    # Subtree size: the tour segment [discovery(v), closing(v)] holds both
+    # directions of every edge inside subtree(v) — 2·size(v) slots.
+    comp_size = jnp.zeros((n,), jnp.int32).at[comp].add(1)
+    size = jnp.where(nonroot, (d_down - d_up + 1) // 2, comp_size)
+
+    # Dense preorder: sort by (component, discovery position). Within a
+    # list, earlier discovery = larger distance-to-end; roots (no
+    # discovery edge) sort first in their component block.
+    key = jnp.where(nonroot, -d_down, jnp.iinfo(jnp.int32).min)
+    order = jnp.lexsort((key, comp)).astype(jnp.int32)
+    pre = jnp.zeros((n,), jnp.int32).at[order].set(verts)
+
+    return TourNumbering(pre=pre, size=size, last=pre + size - 1,
+                         comp=comp, parent=par)

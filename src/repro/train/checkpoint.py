@@ -1,6 +1,6 @@
 """Checkpointing: atomic, step-indexed, mesh-elastic save/restore.
 
-Design (1000+-node posture, DESIGN.md §7):
+Design (1000+-node posture, DESIGN.md §8):
   * the state pytree is flattened to named leaves → one ``.npz`` payload +
     a msgpack manifest (tree structure, shapes, dtypes, step, data cursor);
   * writes go to a temp directory then ``os.replace`` (atomic publish) —

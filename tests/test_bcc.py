@@ -1,0 +1,239 @@
+"""Biconnectivity layer tests: goldens, networkx oracle, flavor invariance.
+
+The acceptance bar: articulation points, bridges, and the per-edge BCC
+partition from ``core.bcc`` match networkx on every generator in
+``data/graphs.py``, identically for all three ``rst_flavor``s.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core import Graph, bcc_batch, biconnectivity, tour_numbering
+from repro.core.rst import METHODS
+from repro.data import graphs as G
+
+
+def _edge(u, v):
+    return frozenset((int(u), int(v)))
+
+
+def _decompose(g, flavor, root=0):
+    """Run biconnectivity; return (art set, bridge set, edge partition)."""
+    res = biconnectivity(g, root, rst_flavor=flavor)
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    real = (src < g.n_nodes) & (dst < g.n_nodes)
+    art = {v for v in range(g.n_nodes) if bool(res.articulation[v])}
+    bridge_mask = np.asarray(res.bridge)
+    bridges = {_edge(u, v) for u, v, e, ok in
+               zip(src, dst, bridge_mask, real) if ok and e}
+    labels = np.asarray(res.edge_bcc)
+    blocks: dict[int, set] = {}
+    for u, v, lab, ok in zip(src, dst, labels, real):
+        if ok:
+            blocks.setdefault(int(lab), set()).add(_edge(u, v))
+    partition = frozenset(frozenset(b) for b in blocks.values())
+    return art, bridges, partition, int(res.n_bcc)
+
+
+def _nx_reference(g):
+    nx = pytest.importorskip("networkx")
+    nxg = nx.Graph()
+    nxg.add_nodes_from(range(g.n_nodes))
+    nxg.add_edges_from(zip(np.asarray(g.src).tolist(),
+                           np.asarray(g.dst).tolist()))
+    art = set(nx.articulation_points(nxg))
+    bridges = {_edge(u, v) for u, v in nx.bridges(nxg)}
+    partition = frozenset(
+        frozenset(_edge(u, v) for u, v in comp)
+        for comp in nx.biconnected_component_edges(nxg))
+    return art, bridges, partition
+
+
+def _assert_matches_nx(g, root=0):
+    art_ref, bridges_ref, partition_ref = _nx_reference(g)
+    for flavor in METHODS:
+        art, bridges, partition, n_bcc = _decompose(g, flavor, root)
+        assert art == art_ref, (flavor, art ^ art_ref)
+        assert bridges == bridges_ref, (flavor, bridges ^ bridges_ref)
+        assert partition == partition_ref, flavor
+        assert n_bcc == len(partition_ref), flavor
+
+
+# ---------------------------------------------------------------- goldens
+
+@pytest.mark.parametrize("flavor", METHODS)
+def test_golden_bridge_path(flavor):
+    """Path graph: every edge a bridge, every internal vertex a cut."""
+    n = 9
+    g = G.chain(n)
+    art, bridges, partition, n_bcc = _decompose(g, flavor)
+    assert art == set(range(1, n - 1))
+    assert bridges == {_edge(i, i + 1) for i in range(n - 1)}
+    assert n_bcc == n - 1 and len(partition) == n - 1
+
+
+@pytest.mark.parametrize("flavor", METHODS)
+def test_golden_cycle(flavor):
+    """Cycle: one block, no bridges, no articulation points."""
+    n = 7
+    g = Graph.from_numpy_undirected(
+        n, np.asarray([(i, (i + 1) % n) for i in range(n)]))
+    art, bridges, partition, n_bcc = _decompose(g, flavor)
+    assert art == set() and bridges == set()
+    assert n_bcc == 1 and len(partition) == 1
+
+
+@pytest.mark.parametrize("flavor", METHODS)
+def test_golden_two_blocks_shared_cut_vertex(flavor):
+    """Two triangles sharing vertex 2 (bowtie): 2 is the only cut vertex."""
+    g = Graph.from_numpy_undirected(
+        5, np.asarray([(0, 1), (1, 2), (2, 0), (2, 3), (3, 4), (4, 2)]))
+    art, bridges, partition, n_bcc = _decompose(g, flavor)
+    assert art == {2}
+    assert bridges == set()
+    assert n_bcc == 2
+    assert partition == frozenset((
+        frozenset((_edge(0, 1), _edge(1, 2), _edge(2, 0))),
+        frozenset((_edge(2, 3), _edge(3, 4), _edge(4, 2)))))
+
+
+@pytest.mark.parametrize("flavor", METHODS)
+def test_golden_cycle_with_tail(flavor):
+    """Cycle + pendant path: the attachment vertex cuts, tail edges bridge."""
+    g = Graph.from_numpy_undirected(
+        6, np.asarray([(0, 1), (1, 2), (2, 3), (3, 0), (0, 4), (4, 5)]))
+    art, bridges, partition, n_bcc = _decompose(g, flavor)
+    assert art == {0, 4}
+    assert bridges == {_edge(0, 4), _edge(4, 5)}
+    assert n_bcc == 3
+
+
+# ------------------------------------------------------- networkx oracle
+
+@pytest.mark.parametrize("name,factory,kwargs", [
+    ("chain", G.chain, dict(n=33)),
+    ("grid2d", G.grid2d, dict(side=6)),
+    ("erdos_renyi", G.erdos_renyi, dict(n=72, avg_degree=3, seed=2)),
+    ("rmat", G.rmat, dict(scale=5, edge_factor=2, seed=3)),
+    ("pref_attach", G.pref_attach, dict(n=48, m_per=2, seed=4)),
+])
+def test_matches_networkx_all_generators(name, factory, kwargs):
+    _assert_matches_nx(factory(**kwargs))
+
+
+def test_matches_networkx_nonzero_root():
+    _assert_matches_nx(G.erdos_renyi(50, avg_degree=3, seed=7), root=23)
+
+
+# ----------------------------------------------------- flavor invariance
+
+def test_flavors_identical():
+    """The decomposition itself must be flavor-invariant (labels may not
+    be — partitions and masks must)."""
+    g = G.erdos_renyi(64, avg_degree=3, seed=11)
+    ref = None
+    for flavor in METHODS:
+        got = _decompose(g, flavor)
+        if ref is None:
+            ref = got
+        else:
+            assert got == ref, flavor
+
+
+def test_disconnected_forest_flavors_full_bfs_root_component():
+    """Forest flavors decompose every component; bfs covers (exactly) the
+    root's component, labelling everything else −1."""
+    # triangle {0,1,2} + path 3-4-5 (cut vertex 4, two bridges)
+    g = Graph.from_numpy_undirected(
+        6, np.asarray([(0, 1), (1, 2), (2, 0), (3, 4), (4, 5)]))
+    art_ref, bridges_ref, partition_ref = _nx_reference(g)
+    for flavor in ("gconn_euler", "pr_rst"):
+        art, bridges, partition, n_bcc = _decompose(g, flavor)
+        assert art == art_ref and bridges == bridges_ref
+        assert partition == partition_ref and n_bcc == 3
+    res = biconnectivity(g, 0, rst_flavor="bfs")
+    src, dst = np.asarray(g.src), np.asarray(g.dst)
+    in_root_comp = np.isin(src, (0, 1, 2)) & np.isin(dst, (0, 1, 2))
+    labels = np.asarray(res.edge_bcc)
+    assert (labels[~in_root_comp] == -1).all()
+    assert (labels[in_root_comp] >= 0).all()
+    assert not np.asarray(res.bridge).any()          # triangle: no bridges
+    assert not np.asarray(res.articulation).any()    # 4 is outside coverage
+    assert int(res.n_bcc) == 1
+
+
+# ------------------------------------------------------------- numbering
+
+def test_tour_numbering_intervals():
+    """Preorder is dense and subtree(v) == [pre[v], pre[v] + size[v])."""
+    g = G.erdos_renyi(40, avg_degree=4, seed=5)
+    from repro.core import rooted_spanning_tree
+    res = rooted_spanning_tree(g, 0, method="gconn_euler")
+    tn = tour_numbering(res.parent)
+    n = g.n_nodes
+    pre = np.asarray(tn.pre)
+    size = np.asarray(tn.size)
+    par = np.asarray(tn.parent)
+    assert sorted(pre.tolist()) == list(range(n))
+    kids: list[list[int]] = [[] for _ in range(n)]
+    for v in range(n):
+        if par[v] != v:
+            kids[par[v]].append(v)
+            assert pre[par[v]] < pre[v]          # parent discovered first
+
+    def subtree(v):
+        out = {v}
+        for c in kids[v]:
+            out |= subtree(c)
+        return out
+
+    for v in range(n):
+        s = subtree(v)
+        assert size[v] == len(s)
+        assert {int(pre[w]) for w in s} == set(
+            range(int(pre[v]), int(pre[v]) + len(s)))
+
+
+def test_tour_numbering_forest():
+    """Disconnected input: components occupy contiguous preorder blocks."""
+    edges = np.asarray([(0, 1), (1, 2), (4, 5), (5, 6), (6, 4)])
+    g = Graph.from_numpy_undirected(8, edges)
+    from repro.core import rooted_spanning_tree
+    res = rooted_spanning_tree(g, 0, method="pr_rst")
+    tn = tour_numbering(res.parent)
+    pre = np.asarray(tn.pre)
+    comp = np.asarray(tn.comp)
+    assert sorted(pre.tolist()) == list(range(8))
+    for c in set(comp.tolist()):
+        block = sorted(int(pre[v]) for v in range(8) if comp[v] == c)
+        assert block == list(range(block[0], block[0] + len(block)))
+
+
+# ------------------------------------------------------------------ batch
+
+def test_bcc_batch_matches_unbatched():
+    """vmap path equals per-graph results (chains with a moving chord)."""
+    n = 16
+    base = [(i, i + 1) for i in range(n - 1)]
+    gs = [Graph.from_numpy_undirected(n, np.asarray(base + [(0, j)]))
+          for j in (5, 9, 14)]
+    src = jnp.stack([g.src for g in gs])
+    dst = jnp.stack([g.dst for g in gs])
+    roots = jnp.zeros((len(gs),), jnp.int32)
+    for flavor in METHODS:
+        batched = bcc_batch(src, dst, roots, n_nodes=n, rst_flavor=flavor)
+        for i, g in enumerate(gs):
+            single = biconnectivity(g, 0, rst_flavor=flavor)
+            for field in ("articulation", "bridge", "edge_bcc", "pre",
+                          "size", "low", "high"):
+                assert np.array_equal(
+                    np.asarray(getattr(batched, field)[i]),
+                    np.asarray(getattr(single, field))), (flavor, i, field)
+            assert int(batched.n_bcc[i]) == int(single.n_bcc)
+
+
+def test_unknown_flavor_raises():
+    g = G.chain(4)
+    with pytest.raises(ValueError, match="rst_flavor"):
+        biconnectivity(g, 0, rst_flavor="dfs")

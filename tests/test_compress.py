@@ -8,7 +8,8 @@ import pytest
 from numpy.testing import assert_array_equal
 
 from repro.core.compress import (DEFAULT_JUMPS, compress_full, jump_k,
-                                 rank_to_root, roots_of, wyllie_rank)
+                                 rank_to_root, reduce_to_root, roots_of,
+                                 segment_reduce, wyllie_rank)
 
 rng = np.random.default_rng(7)
 
@@ -144,6 +145,58 @@ def test_wyllie_rank_random_list(use_kernel, n):
     expect = np.empty(n, np.int64)
     expect[perm] = n - 1 - np.arange(n)
     assert_array_equal(np.asarray(d), expect)
+
+
+def _path_to_root(p: np.ndarray, v: int) -> list[int]:
+    path = [v]
+    while p[path[-1]] != path[-1]:
+        path.append(int(p[path[-1]]))
+    return path
+
+
+@pytest.mark.parametrize("case", ["chain", "star", "self_loops",
+                                  "random_forest", "padded_tail"])
+@pytest.mark.parametrize("op", ["min", "max"])
+def test_reduce_to_root_idempotent_ops(case, op):
+    """Payload-reduce doubling: red[v] = op over v's root path, inclusive."""
+    p_np = _forests(257)[case]
+    payload = rng.integers(-100, 100, p_np.shape[0]).astype(np.int32)
+    red, root = reduce_to_root(jnp.asarray(p_np), jnp.asarray(payload), op)
+    npop = np.min if op == "min" else np.max
+    for v in range(0, p_np.shape[0], 13):
+        path = _path_to_root(p_np, v)
+        assert int(red[v]) == npop(payload[path]), (v, path)
+        assert int(root[v]) == path[-1]
+
+
+@pytest.mark.parametrize("n_jumps", [1, 3, DEFAULT_JUMPS])
+def test_rank_to_root_routes_through_reduce_to_root(n_jumps):
+    p_np = _forests(500)["random_forest"]
+    depth, root, syncs = rank_to_root(jnp.asarray(p_np), n_jumps=n_jumps,
+                                      return_syncs=True)
+    assert_array_equal(np.asarray(depth), naive_depths(p_np))
+    assert_array_equal(np.asarray(root), naive_compress(p_np))
+    max_depth = int(naive_depths(p_np).max())
+    assert int(syncs) <= math.ceil(math.log2(max(max_depth, 2)) / n_jumps) + 1
+
+
+@pytest.mark.parametrize("op", ["min", "max"])
+@pytest.mark.parametrize("n", [1, 2, 64, 257])
+def test_segment_reduce_matches_numpy(op, n):
+    values = rng.integers(-1000, 1000, n).astype(np.int32)
+    lo = rng.integers(0, n, 4 * n).astype(np.int32)
+    hi = np.asarray([rng.integers(l, n) for l in lo], np.int32)
+    out = segment_reduce(jnp.asarray(values), jnp.asarray(lo),
+                         jnp.asarray(hi), op)
+    npop = np.min if op == "min" else np.max
+    expect = np.asarray([npop(values[l:h + 1]) for l, h in zip(lo, hi)])
+    assert_array_equal(np.asarray(out), expect)
+
+
+def test_segment_reduce_rejects_non_idempotent_op():
+    v = jnp.zeros((4,), jnp.int32)
+    with pytest.raises(ValueError, match="idempotent"):
+        segment_reduce(v, v[:1], v[:1], "add")
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])
