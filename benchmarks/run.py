@@ -7,6 +7,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
   table1/*            measured step counts vs theory (Table I)
   table3/*            downstream biconnectivity cost per RST flavor
                       (the Tarjan–Vishkin layer, DESIGN.md §4)
+  table4_dynamic/*    batch-dynamic maintenance vs from-scratch rebuild per
+                      stream × batch size (DESIGN.md §9)
   kernels/*           Pallas kernel micro-benchmarks (incl. compress_* engine
                       rows; interpret mode off-TPU)
   ablation_compress/* amortized vs per-hop convergence checks (engine k=5
@@ -95,7 +97,8 @@ def main(argv=None) -> None:
     args = parser.parse_args(argv)
 
     from benchmarks import (ablation_hooking, fig1_runtime, fig2_depth,
-                            table1_steps, table2_stats, table3_bcc)
+                            table1_steps, table2_stats, table3_bcc,
+                            table4_dynamic)
     from benchmarks.common import rows_to_records
 
     if args.smoke:
@@ -121,6 +124,7 @@ def main(argv=None) -> None:
     emit(fig2_depth.run(suite))
     emit(fig1_runtime.run(suite))
     emit(table3_bcc.run(suite))
+    emit(table4_dynamic.run(suite))
     emit(ablation_hooking.run(suite))
     emit(kernel_microbench(micro_n))
     emit(compress_microbench(micro_n))

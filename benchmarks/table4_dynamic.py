@@ -1,0 +1,106 @@
+"""Table IV (extension): batch-dynamic maintenance vs from-scratch rebuild.
+
+The paper's tables freeze the graph; this table measures the workload
+the batch-dynamic layer (DESIGN.md §9) opens — edge-update streams —
+and the comparison the static tables can't express: per batch size, is
+*maintaining* the rooted forest (cut + scoped rep update + link loop +
+incremental tour refresh) cheaper than *rebuilding* it (GConn + Euler +
+full tour numbering on the live graph)?
+
+Rows (median over the paper's 1 + 5 methodology, steady-state batch):
+
+  table4_dynamic/{graph}/{stream}/b{B}/incremental
+      one ``dynamic.replay_batch`` + incremental ``refresh_tour``
+  table4_dynamic/{graph}/{stream}/b{B}/recompute
+      from-scratch ``rooted_spanning_tree`` (gconn_euler) + full
+      ``tour_numbering`` over the same live graph
+
+derived: updates/sec at that batch size, link rounds, live edges. Small
+batches should favor incremental (touched components ≪ graph); the
+crossover batch size is the quantity of interest.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.core.euler import tour_numbering
+from repro.core.rst import rooted_spanning_tree
+from repro.data.graphs import build_suite
+from repro.data.streams import STREAMS
+from repro.dynamic import init_state, live_graph, refresh_tour, replay_batch
+
+#: streams measured (insert_heavy behaves like sliding_window's insert
+#: half; two regimes keep the row count honest).
+_STREAM_NAMES = ("sliding_window", "churn")
+
+
+def _batches_for(n: int) -> tuple[int, ...]:
+    return (4, 16) if n <= 1024 else (16, 256)
+
+
+def _steady_state(stream, warm_batches: int):
+    """Advance a few batches so timing sees steady state, not cold start."""
+    state = init_state(stream)
+    tn = None
+    for b in stream.batches[:warm_batches]:
+        state, _ = replay_batch(state, b)
+    tn, state = refresh_tour(state, tn)
+    return state, tn
+
+
+def run(suite=None) -> list[str]:
+    rows = []
+    suite = suite or build_suite(["grid_64", "rmat_14"])
+    for name, g in suite.items():
+        for stream_name in _STREAM_NAMES:
+            for batch in _batches_for(g.n_nodes):
+                stream = STREAMS[stream_name](g, batch=batch, seed=0,
+                                              n_batches=6)
+                if len(stream.batches) < 2:
+                    continue
+                state, tn = _steady_state(stream, len(stream.batches) - 1)
+                b = stream.batches[-1]
+                events = int((b.ins_u < g.n_nodes).sum()
+                             + (b.del_u < g.n_nodes).sum())
+
+                # replay_batch / refresh_tour are functional: timing
+                # repeats the same batch from the same pre-state.
+                def incr():
+                    s2, stats = replay_batch(state, b)
+                    tn2, s2 = refresh_tour(s2, tn, incremental=True)
+                    return s2.parent, tn2.pre, stats
+
+                parent, _, stats = jax.block_until_ready(incr())
+                t_incr = time_fn(lambda: jax.block_until_ready(incr()))
+
+                s_after, _ = replay_batch(state, b)
+                lg = live_graph(s_after)
+                root = int(np.asarray(s_after.rep)[0])
+
+                def scratch():
+                    res = rooted_spanning_tree(lg, root,
+                                               method="gconn_euler")
+                    tn2 = tour_numbering(res.parent)
+                    return res.parent, tn2.pre
+
+                jax.block_until_ready(scratch())
+                t_scr = time_fn(lambda: jax.block_until_ready(scratch()))
+
+                live = int(s_after.n_live_edges)
+                rounds = int(stats["rounds"])
+                base = f"table4_dynamic/{name}/{stream_name}/b{batch}"
+                rows.append(csv_row(
+                    f"{base}/incremental", t_incr * 1e6,
+                    f"updates_per_sec={events / max(t_incr, 1e-9):.0f};"
+                    f"rounds={rounds};live={live}"))
+                rows.append(csv_row(
+                    f"{base}/recompute", t_scr * 1e6,
+                    f"updates_per_sec={events / max(t_scr, 1e-9):.0f};"
+                    f"live={live}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

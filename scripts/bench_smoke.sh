@@ -12,4 +12,8 @@ if ! grep -q '"name": "table3/' BENCH_rst.json; then
     echo "bench_smoke: no table3/* biconnectivity row in BENCH_rst.json" >&2
     exit 1
 fi
-echo "bench_smoke: ok (table3 smoke rows present)"
+if ! grep -q '"name": "table4_dynamic/' BENCH_rst.json; then
+    echo "bench_smoke: no table4_dynamic/* batch-dynamic row in BENCH_rst.json" >&2
+    exit 1
+fi
+echo "bench_smoke: ok (table3 + table4_dynamic smoke rows present)"

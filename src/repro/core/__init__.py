@@ -2,13 +2,15 @@
 from repro.core.graph import Graph, build_csr
 from repro.core.bcc import BCCResult, bcc_batch, bcc_from_parent, biconnectivity
 from repro.core.bfs import bfs_rst
-from repro.core.compress import (DEFAULT_JUMPS, compress_full, jump_k,
-                                 rank_to_root, reduce_to_root, roots_of,
-                                 segment_reduce, wyllie_rank)
+from repro.core.compress import (DEFAULT_JUMPS, compress_full,
+                                 compress_scoped, jump_k, rank_to_root,
+                                 reduce_to_root, roots_of, segment_reduce,
+                                 wyllie_rank)
 from repro.core.connectivity import connected_components, pointer_jump_full
 from repro.core.euler import (TourNumbering, euler_tour_root,
                               list_rank_dist_to_end, tour_numbering)
 from repro.core.pr_rst import pr_rst
+from repro.core.reroot import link_components, mark_paths, reverse_and_graft
 from repro.core.rst import (METHODS, RSTResult, gconn_euler_rst,
                             rooted_spanning_tree, tree_depth)
 
@@ -19,6 +21,8 @@ __all__ = [
     "BCCResult", "bcc_batch", "bcc_from_parent", "biconnectivity",
     "pr_rst", "METHODS", "RSTResult", "gconn_euler_rst",
     "rooted_spanning_tree", "tree_depth",
-    "DEFAULT_JUMPS", "compress_full", "jump_k", "rank_to_root",
-    "reduce_to_root", "roots_of", "segment_reduce", "wyllie_rank",
+    "DEFAULT_JUMPS", "compress_full", "compress_scoped", "jump_k",
+    "rank_to_root", "reduce_to_root", "roots_of", "segment_reduce",
+    "wyllie_rank",
+    "link_components", "mark_paths", "reverse_and_graft",
 ]

@@ -146,8 +146,8 @@ def bcc_from_parent(graph: Graph, parent: jnp.ndarray, *,
     # (engine payload-reduce doubling table, DESIGN.md §4).
     a_low = jnp.zeros((n,), jnp.int32).at[pre].set(loc_low)
     a_high = jnp.zeros((n,), jnp.int32).at[pre].set(loc_high)
-    low = segment_reduce(a_low, pre, tn.last, "min")
-    high = segment_reduce(a_high, pre, tn.last, "max")
+    low = segment_reduce(a_low, pre, tn.last, "min", use_kernel=use_kernel)
+    high = segment_reduce(a_high, pre, tn.last, "max", use_kernel=use_kernel)
 
     # Aux edges. R1: unrelated non-tree edges (order by preorder so each
     # undirected edge contributes once; the reverse half-edge is inert).

@@ -147,6 +147,33 @@ def roots_of(p: jnp.ndarray, **kwargs):
     return compress_full(p, **kwargs)
 
 
+def compress_scoped(p: jnp.ndarray, active: jnp.ndarray, **kwargs):
+    """Scoped compression: compress ``active`` rows, freeze the rest.
+
+    The ``jump_k``-based dirty-vertex variant for the batch-dynamic layer
+    (DESIGN.md §9): inactive rows are masked to self-loops *before* the
+    convergence loop, so they are fixed points from the first step and the
+    sync count is ⌈log2(max depth among active chains)/n_jumps⌉ + 1 —
+    independent of how deep the untouched components are. Same kwargs and
+    kernel path as ``compress_full``.
+
+    Args:
+      p: int32[n] parent table (roots self-point).
+      active: bool[n] scope mask. Must be closed under ``p`` — every chain
+        starting at an active vertex stays inside ``active`` (component-
+        closed masks, e.g. "every vertex whose component had a cut",
+        satisfy this; a chain that escapes the mask stops at the first
+        inactive vertex instead of its true root).
+
+    Returns:
+      int32[n]: chain roots where ``active``, identity elsewhere (merge
+      with the caller's cached representative array via ``jnp.where``).
+    """
+    n = p.shape[0]
+    verts = jnp.arange(n, dtype=p.dtype)
+    return compress_full(jnp.where(active, p, verts), **kwargs)
+
+
 _COMBINE = {"add": jnp.add, "min": jnp.minimum, "max": jnp.maximum}
 
 
@@ -217,9 +244,10 @@ def rank_to_root(parent: jnp.ndarray, *, n_jumps: int = DEFAULT_JUMPS,
                           return_syncs=return_syncs)
 
 
-@partial(jax.jit, static_argnames=("op",))
+@partial(jax.jit, static_argnames=("op", "use_kernel", "interpret"))
 def segment_reduce(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
-                   op: str = "min"):
+                   op: str = "min", *, use_kernel: bool = False,
+                   interpret: bool | None = None):
     """Idempotent range reduction: out[q] = op over values[lo[q] .. hi[q]].
 
     The payload-reduce analogue of ``jump_k`` on the shift successor
@@ -237,6 +265,9 @@ def segment_reduce(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
       values: [n] array, any dtype ``op`` supports.
       lo, hi: int32[q] inclusive query bounds, ``0 <= lo <= hi < n``.
       op: "min" | "max" (idempotent ops only — "add" would double-count).
+      use_kernel: build the sparse table in one whole-table Pallas launch
+        (``kernels.segment_table``; the query fold stays XLA-side).
+      interpret: Pallas interpret mode; None → ``default_interpret()``.
 
     Returns:
       [q] array of per-query reductions, same dtype as ``values``.
@@ -246,15 +277,31 @@ def segment_reduce(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
     combine = _COMBINE[op]
     n = values.shape[0]
     levels = max(1, (n - 1).bit_length())
-    idx = jnp.arange(n, dtype=jnp.int32)
-    rows = [values]
-    t = values
-    for k in range(levels):
-        # Clamp at the boundary: T[k][n-1] covers {n-1} ⊆ any suffix, so
-        # folding it in is an idempotent no-op (add would be wrong here).
-        t = combine(t, t[jnp.minimum(idx + (1 << k), n - 1)])
-        rows.append(t)
-    table = jnp.stack(rows)                      # [levels+1, n]
+    if use_kernel:
+        if interpret is None:
+            interpret = default_interpret()
+        from repro.kernels.segment_table.ops import segment_table
+        table = segment_table(values, levels=levels, op=op,
+                              interpret=interpret)  # [levels+1, n]
+    else:
+        rows = [values]
+        t = values
+        for k in range(levels):
+            # The shift successor i ↦ i + 2^k is static: a slice beats a
+            # gather (chained whole-table gathers cost XLA quadratic
+            # compile time — measured 37 s at n = 2000). Off-the-end
+            # positions fold T[k][n-1], which covers {n-1} ⊆ any suffix,
+            # so the fold is an idempotent no-op (add would be wrong
+            # here).
+            s = 1 << k
+            if s < n:
+                shifted = jnp.concatenate(
+                    [t[s:], jnp.broadcast_to(t[n - 1], (s,))])
+            else:
+                shifted = jnp.broadcast_to(t[n - 1], (n,))
+            t = combine(t, shifted)
+            rows.append(t)
+        table = jnp.stack(rows)                  # [levels+1, n]
 
     length = hi - lo + 1
     # k = floor(log2(length)), int-exact (no float log at segment bounds).

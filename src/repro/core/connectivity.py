@@ -48,11 +48,17 @@ def connected_components(graph: Graph, *, max_rounds: int | None = None,
                          alternate_hooking: bool = False):
     """Connectivity + spanning forest via alternating hook / compress rounds.
 
+    Multigraph-honest: inputs may carry parallel edges and self-loops
+    (``Graph.from_undirected`` does not dedupe — the dynamic layer's edge
+    pool is exactly such a multigraph). Winner-edge selection is deduped
+    at undirected-edge-id level, so at most one half-edge per vertex pair
+    is ever marked and self-loops never claim a slot.
+
     Returns:
       rep:         int32[n] component representative per vertex (a root id).
       forest_mask: bool[2M] — True for half-edges selected as spanning-forest
-                   edges (at most one direction of an undirected edge is set;
-                   exactly n - n_components are set in total).
+                   edges (only the canonical half e < M of an undirected edge
+                   can be set; exactly n - n_components are set in total).
       rounds:      int32 scalar — hook/compress rounds executed (the paper's
                    O(log n) step count).
     """
@@ -60,6 +66,14 @@ def connected_components(graph: Graph, *, max_rounds: int | None = None,
     src, dst = graph.src, graph.dst
     m2 = src.shape[0]
     edge_id = jnp.arange(m2, dtype=jnp.int32)
+    # Canonical *undirected* edge id: both halves e and e + M of the same
+    # undirected edge share min(e, rev(e)) = e % M. Winner selection runs
+    # on canonical ids so the forest scatter can never admit two
+    # half-edges of one undirected edge — the multigraph honesty the
+    # batch-dynamic deletion path depends on (DESIGN.md §9). Self-loops
+    # are excluded by ``cross`` (their endpoint reps are always equal).
+    m = m2 // 2
+    eid_canon = jnp.where(edge_id < m, edge_id, edge_id - m)
 
     p0 = jnp.arange(n, dtype=jnp.int32)
     forest0 = jnp.zeros((m2,), jnp.bool_)
@@ -85,7 +99,6 @@ def connected_components(graph: Graph, *, max_rounds: int | None = None,
         val = jnp.where(use_min, lo, hi)     # new parent for that root
 
         # Stage 1: deterministic scatter (min- or max-hooking).
-        prop = jnp.where(cross, val, jnp.where(use_min, INF32, -1))
         hooked_min = jnp.full((n,), INF32, jnp.int32).at[tgt].min(
             jnp.where(cross, val, INF32))
         hooked_max = jnp.full((n,), -1, jnp.int32).at[tgt].max(
@@ -95,10 +108,14 @@ def connected_components(graph: Graph, *, max_rounds: int | None = None,
         p_next = jnp.where(got_hook, new_parent, p)
 
         # Stage 2: winner half-edge per successful hook → spanning edge.
+        # Deduped at undirected-edge-id level: the scatter-min runs on
+        # canonical ids and only the canonical half may win, so parallel
+        # slots and the two halves of one edge can never both be marked.
         achieved = cross & (new_parent[tgt] == val)
         win_eid = jnp.full((n,), INF32, jnp.int32).at[tgt].min(
-            jnp.where(achieved, edge_id, INF32))
-        is_winner = achieved & (win_eid[tgt] == edge_id)
+            jnp.where(achieved, eid_canon, INF32))
+        is_winner = (achieved & (win_eid[tgt] == eid_canon)
+                     & (edge_id == eid_canon))
         forest = forest | is_winner
 
         # Compress to full convergence before the next round.

@@ -45,6 +45,11 @@ Two memory-traffic optimizations on top (DESIGN.md §3):
 The returned P is a spanning tree rooted wherever the last surviving
 component root happened to be; a final path reversal re-roots it at the
 designated root (a one-round reuse of the same machinery).
+
+The doubling-table marking, masked-scatter reversal, and per-component
+link round live in ``core.reroot`` (shared with the batch-dynamic layer,
+DESIGN.md §9); this module keeps only the hooking policy and the round /
+convergence loop.
 """
 from __future__ import annotations
 
@@ -53,93 +58,11 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.compress import DEFAULT_JUMPS, compress_full
+from repro.core.compress import DEFAULT_JUMPS
 from repro.core.graph import Graph
+from repro.core.reroot import link_components, mark_paths, reverse_and_graft
 
 INF32 = jnp.iinfo(jnp.int32).max
-
-
-def _ancestor_tables(p: jnp.ndarray, levels: int):
-    """Doubling tables (anc, pred, valid), each [levels, n], plus ``used``.
-
-    anc[k][v]  = ancestor of v at distance exactly 2^k (if valid[k][v]).
-    pred[k][v] = the path vertex immediately below anc[k][v] on v's root path.
-    valid[k][v] = depth(v) >= 2^k.
-
-    Only the first ``used`` levels are populated: the build loop exits as
-    soon as ``valid`` saturates all-false (no vertex is that deep), so a
-    forest of maximum depth D costs ⌈log2(D)⌉ + 1 levels of 3 gathers each
-    rather than the static ⌈log n⌉. Levels ≥ ``used`` are all-invalid and
-    must not be consulted (``_mark_paths`` bounds its loop by ``used``).
-    """
-    n = p.shape[0]
-    v0 = jnp.arange(n, dtype=jnp.int32)
-    anc0 = p
-    pred0 = v0
-    valid0 = p != v0
-
-    bufs0 = (jnp.zeros((levels, n), jnp.int32),
-             jnp.zeros((levels, n), jnp.int32),
-             jnp.zeros((levels, n), jnp.bool_))
-
-    def cond(state):
-        k, _anc, _pred, valid, _bufs = state
-        return (k < levels) & jnp.any(valid)
-
-    def body(state):
-        k, anc, pred, valid, (ab, pb, vb) = state
-        ab = ab.at[k].set(anc)
-        pb = pb.at[k].set(pred)
-        vb = vb.at[k].set(valid)
-        anc2 = anc[anc]
-        pred2 = pred[anc]
-        valid2 = valid & valid[anc]
-        return k + 1, anc2, pred2, valid2, (ab, pb, vb)
-
-    used, _, _, _, (ancs, preds, valids) = jax.lax.while_loop(
-        cond, body, (jnp.int32(0), anc0, pred0, valid0, bufs0))
-    return ancs, preds, valids, used
-
-
-def _mark_paths(p: jnp.ndarray, starts: jnp.ndarray, active: jnp.ndarray,
-                levels: int):
-    """Mark every vertex on the P-root-path of each active start vertex.
-
-    Returns (mark: bool[n], prednode: int32[n]) — prednode[w] is the path
-    vertex immediately below w (valid where mark & w is not a start).
-    """
-    n = p.shape[0]
-    ancs, preds, valids, used = _ancestor_tables(p, levels)
-
-    mark = jnp.zeros((n,), jnp.bool_)
-    start_idx = jnp.where(active, starts, n)
-    mark = mark.at[start_idx].set(True, mode="drop")
-    prednode = jnp.full((n,), -1, jnp.int32)
-
-    def body(k, state):
-        mark, prednode = state
-        anc_k = ancs[k]
-        pred_k = preds[k]
-        ok = mark & valids[k]
-        tgt = jnp.where(ok, anc_k, n)
-        mark = mark.at[tgt].set(True, mode="drop")
-        prednode = prednode.at[tgt].set(pred_k, mode="drop")
-        return mark, prednode
-
-    mark, prednode = jax.lax.fori_loop(0, used, body, (mark, prednode))
-    return mark, prednode
-
-
-def _reverse_and_graft(p, mark, prednode, starts, grafts, active):
-    """Flip parent pointers along marked paths; set P[start] = graft."""
-    n = p.shape[0]
-    is_start = jnp.zeros((n,), jnp.bool_).at[
-        jnp.where(active, starts, n)].set(True, mode="drop")
-    flip = mark & ~is_start & (prednode >= 0)
-    p = jnp.where(flip, prednode, p)
-    p = p.at[jnp.where(active, starts, n)].set(
-        jnp.where(active, grafts, 0), mode="drop")
-    return p
 
 
 def _pr_rst_round(p, rt, rnd, src, dst, *, levels: int,
@@ -150,51 +73,27 @@ def _pr_rst_round(p, rt, rnd, src, dst, *, levels: int,
     Precondition: ``rt == roots_of(p)`` (the incremental-representative
     invariant; checked by tests/test_compress.py).
 
-    Returns (p_next, rt_next, hooked) with the invariant re-established
-    incrementally: one engine compression of the component-level graft
-    overlay instead of a from-scratch ``roots_of`` over the tree.
+    The mover side of each cross edge is chosen by root-id order (min- or
+    max-hooking); the shared link primitive (``core.reroot``, DESIGN.md §9)
+    does winner selection, path reversal, grafting, and the incremental
+    representative update. Returns (p_next, rt_next, hooked).
     """
-    n = p.shape[0]
-    m2 = src.shape[0]
-    edge_id = jnp.arange(m2, dtype=jnp.int32)
-    verts = jnp.arange(n, dtype=jnp.int32)
-
     ru = rt[src]
     rv = rt[dst]
     cross = ru != rv
 
     # Hook direction (see connectivity.py: pure-min by default; the
-    # paper's alternation kept for ablation).
+    # paper's alternation kept for ablation). Root-id order is strict
+    # within a round, so the component overlay stays acyclic.
     use_min = ((rnd % 2) == 0) if alternate_hooking else jnp.bool_(True)
     mover = jnp.where(use_min, jnp.maximum(ru, rv), jnp.minimum(ru, rv))
     is_u_mover = mover == ru
     start = jnp.where(is_u_mover, src, dst)    # u_i — grafted vertex
     target = jnp.where(is_u_mover, dst, src)   # v_i — graft destination
 
-    # One winning edge per moving component (two-stage scatter-min).
-    key = jnp.where(cross, edge_id, INF32)
-    win = jnp.full((n,), INF32, jnp.int32).at[mover].min(key)
-    is_winner = cross & (win[mover] == edge_id)
-
-    # Per-component (indexed by moving root): start + graft vertices.
-    comp_start = jnp.full((n,), -1, jnp.int32).at[
-        jnp.where(is_winner, mover, n)].set(start, mode="drop")
-    comp_graft = jnp.full((n,), -1, jnp.int32).at[
-        jnp.where(is_winner, mover, n)].set(target, mode="drop")
-    comp_active = comp_start >= 0
-
-    # Mark each moving component's start→root path, reverse, graft.
-    mark, prednode = _mark_paths(p, comp_start, comp_active, levels)
-    p_next = _reverse_and_graft(p, mark, prednode, comp_start, comp_graft,
-                                comp_active)
-
-    # Incremental representative update: moving root m joins the component
-    # of rt[t]; graft chains within a round are monotone in root id, so the
-    # overlay is an acyclic forest over the (much shallower) component graph.
-    graft_root = rt[jnp.clip(comp_graft, 0, n - 1)]
-    overlay = jnp.where(comp_active, graft_root, verts)
-    comp_rt = compress_full(overlay, n_jumps=n_jumps, use_kernel=use_kernel)
-    rt_next = comp_rt[rt]
+    p_next, rt_next, is_winner = link_components(
+        p, rt, start, target, cross, levels=levels, n_jumps=n_jumps,
+        use_kernel=use_kernel)
     return p_next, rt_next, jnp.any(is_winner)
 
 
@@ -237,8 +136,8 @@ def pr_rst(graph: Graph, root, *, max_rounds: int | None = None,
     # Final re-root at the designated root: one more path reversal.
     start = jnp.full((n,), -1, jnp.int32).at[0].set(root)
     active = jnp.zeros((n,), jnp.bool_).at[0].set(True)
-    # Re-index: _mark_paths expects per-slot starts; use slot 0 only.
-    mark, prednode = _mark_paths(p, start, active, levels)
-    p = _reverse_and_graft(p, mark, prednode, start,
-                           jnp.broadcast_to(root, (n,)), active)
+    # Re-index: mark_paths expects per-slot starts; use slot 0 only.
+    mark, prednode = mark_paths(p, start, active, levels)
+    p = reverse_and_graft(p, mark, prednode, start,
+                          jnp.broadcast_to(root, (n,)), active)
     return p, rounds - 1

@@ -1,0 +1,177 @@
+"""Shared path-reversal re-rooting machinery (the PR-RST primitive).
+
+PR-RST's insight (paper §III-C) is that *re-rooting a tree at vertex u*
+is one O(log n)-depth data-parallel operation: mark every vertex on the
+u → root parent path with doubling tables, then flip the marked parent
+pointers in one masked scatter. The seed kept that machinery private to
+``core.pr_rst``; the batch-dynamic layer (``repro.dynamic``) needs the
+identical primitive for incremental edge insertion — an insertion that
+merges two components re-roots one tree at its endpoint and grafts it
+onto the other (DESIGN.md §9) — so it lives here, importable, instead of
+being copied.
+
+Three layers:
+
+* ``ancestor_tables`` / ``mark_paths`` / ``reverse_and_graft`` — the
+  doubling-table path marking and masked-scatter reversal, verbatim from
+  the original PR-RST implementation (adaptive level count included,
+  DESIGN.md §3).
+* ``link_components`` — one batched *link round*: every moving component
+  picks one winning candidate edge (deterministic scatter-min), re-roots
+  itself at that edge's ``start`` vertex and grafts onto ``target``,
+  with the representative array maintained incrementally via one
+  component-overlay compression. ``pr_rst`` rounds and the dynamic
+  forest's insertion/replacement loop are both thin wrappers over it —
+  they differ only in how the per-edge mover side is chosen (root-id
+  order vs smaller-component order).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compress import DEFAULT_JUMPS, compress_full
+
+INF32 = jnp.iinfo(jnp.int32).max
+
+
+def ancestor_tables(p: jnp.ndarray, levels: int):
+    """Doubling tables (anc, pred, valid), each [levels, n], plus ``used``.
+
+    anc[k][v]  = ancestor of v at distance exactly 2^k (if valid[k][v]).
+    pred[k][v] = the path vertex immediately below anc[k][v] on v's root path.
+    valid[k][v] = depth(v) >= 2^k.
+
+    Only the first ``used`` levels are populated: the build loop exits as
+    soon as ``valid`` saturates all-false (no vertex is that deep), so a
+    forest of maximum depth D costs ⌈log2(D)⌉ + 1 levels of 3 gathers each
+    rather than the static ⌈log n⌉. Levels ≥ ``used`` are all-invalid and
+    must not be consulted (``mark_paths`` bounds its loop by ``used``).
+    """
+    n = p.shape[0]
+    v0 = jnp.arange(n, dtype=jnp.int32)
+    anc0 = p
+    pred0 = v0
+    valid0 = p != v0
+
+    bufs0 = (jnp.zeros((levels, n), jnp.int32),
+             jnp.zeros((levels, n), jnp.int32),
+             jnp.zeros((levels, n), jnp.bool_))
+
+    def cond(state):
+        k, _anc, _pred, valid, _bufs = state
+        return (k < levels) & jnp.any(valid)
+
+    def body(state):
+        k, anc, pred, valid, (ab, pb, vb) = state
+        ab = ab.at[k].set(anc)
+        pb = pb.at[k].set(pred)
+        vb = vb.at[k].set(valid)
+        anc2 = anc[anc]
+        pred2 = pred[anc]
+        valid2 = valid & valid[anc]
+        return k + 1, anc2, pred2, valid2, (ab, pb, vb)
+
+    used, _, _, _, (ancs, preds, valids) = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), anc0, pred0, valid0, bufs0))
+    return ancs, preds, valids, used
+
+
+def mark_paths(p: jnp.ndarray, starts: jnp.ndarray, active: jnp.ndarray,
+               levels: int):
+    """Mark every vertex on the P-root-path of each active start vertex.
+
+    Returns (mark: bool[n], prednode: int32[n]) — prednode[w] is the path
+    vertex immediately below w (valid where mark & w is not a start).
+    """
+    n = p.shape[0]
+    ancs, preds, valids, used = ancestor_tables(p, levels)
+
+    mark = jnp.zeros((n,), jnp.bool_)
+    start_idx = jnp.where(active, starts, n)
+    mark = mark.at[start_idx].set(True, mode="drop")
+    prednode = jnp.full((n,), -1, jnp.int32)
+
+    def body(k, state):
+        mark, prednode = state
+        anc_k = ancs[k]
+        pred_k = preds[k]
+        ok = mark & valids[k]
+        tgt = jnp.where(ok, anc_k, n)
+        mark = mark.at[tgt].set(True, mode="drop")
+        prednode = prednode.at[tgt].set(pred_k, mode="drop")
+        return mark, prednode
+
+    mark, prednode = jax.lax.fori_loop(0, used, body, (mark, prednode))
+    return mark, prednode
+
+
+def reverse_and_graft(p, mark, prednode, starts, grafts, active):
+    """Flip parent pointers along marked paths; set P[start] = graft."""
+    n = p.shape[0]
+    is_start = jnp.zeros((n,), jnp.bool_).at[
+        jnp.where(active, starts, n)].set(True, mode="drop")
+    flip = mark & ~is_start & (prednode >= 0)
+    p = jnp.where(flip, prednode, p)
+    p = p.at[jnp.where(active, starts, n)].set(
+        jnp.where(active, grafts, 0), mode="drop")
+    return p
+
+
+def link_components(p: jnp.ndarray, rt: jnp.ndarray, start: jnp.ndarray,
+                    target: jnp.ndarray, cand: jnp.ndarray, *, levels: int,
+                    n_jumps: int = DEFAULT_JUMPS, use_kernel: bool = False):
+    """One batched link round: re-root + graft one winning edge per mover.
+
+    For every candidate edge e, the component of ``start[e]`` is the
+    *mover*: it wants to re-root itself at ``start[e]`` and graft onto
+    ``target[e]``. Each moving component gets exactly one winner
+    (deterministic scatter-min on edge slot id), its start→root path is
+    reversed, and ``P[start] = target`` grafts it.
+
+    Preconditions (caller's contract):
+      * ``rt == roots_of(p)`` — the incremental-representative invariant;
+      * ``rt[start[e]] != rt[target[e]]`` for every candidate e;
+      * the per-round move relation (mover component → target component)
+        follows a strict total order on components, fixed for the round —
+        root id in PR-RST's hooking, (size, root id) in the dynamic
+        forest — so the component-level graft overlay is acyclic.
+
+    Returns ``(p', rt', is_winner)`` with ``rt' == roots_of(p')``
+    re-established incrementally: one engine compression of the
+    component-level overlay plus one gather (DESIGN.md §3), never a
+    from-scratch ``roots_of`` over the tree.
+    """
+    n = p.shape[0]
+    m = start.shape[0]
+    eid = jnp.arange(m, dtype=jnp.int32)
+    verts = jnp.arange(n, dtype=jnp.int32)
+
+    mover = rt[jnp.clip(start, 0, n - 1)]
+
+    # One winning edge per moving component (deterministic scatter-min).
+    key = jnp.where(cand, eid, INF32)
+    win = jnp.full((n,), INF32, jnp.int32).at[
+        jnp.where(cand, mover, n)].min(key, mode="drop")
+    is_winner = cand & (win[mover] == eid)
+
+    # Per-component (indexed by moving root): start + graft vertices.
+    comp_start = jnp.full((n,), -1, jnp.int32).at[
+        jnp.where(is_winner, mover, n)].set(start, mode="drop")
+    comp_graft = jnp.full((n,), -1, jnp.int32).at[
+        jnp.where(is_winner, mover, n)].set(target, mode="drop")
+    comp_active = comp_start >= 0
+
+    # Mark each moving component's start→root path, reverse, graft.
+    mark, prednode = mark_paths(p, comp_start, comp_active, levels)
+    p_next = reverse_and_graft(p, mark, prednode, comp_start, comp_graft,
+                               comp_active)
+
+    # Incremental representative update: moving root m joins the component
+    # of rt[t]; the move order is strict within a round, so the overlay is
+    # an acyclic forest over the (much shallower) component graph.
+    graft_root = rt[jnp.clip(comp_graft, 0, n - 1)]
+    overlay = jnp.where(comp_active, graft_root, verts)
+    comp_rt = compress_full(overlay, n_jumps=n_jumps, use_kernel=use_kernel)
+    rt_next = comp_rt[rt]
+    return p_next, rt_next, is_winner

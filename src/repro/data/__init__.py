@@ -1,1 +1,3 @@
-"""Data pipelines: synthetic graph suite, neighbor sampler, token streams."""
+"""Data pipelines: synthetic graph suite (``graphs``), edge-update stream
+generators for the batch-dynamic layer (``streams``, DESIGN.md §9),
+neighbor sampler, token streams."""

@@ -1,0 +1,17 @@
+"""Batch-dynamic rooted-spanning-forest maintenance (DESIGN.md §9).
+
+State + update application (``forest``), incremental tour refresh
+(``tour``). Edge-stream workloads live in ``repro.data.streams``; the
+serving loop in ``repro.launch.serve_stream``.
+"""
+from repro.dynamic.forest import (DynamicForest, apply_batch, edge_slots,
+                                  forest_empty, forest_from_graph,
+                                  live_graph)
+from repro.dynamic.replay import init_state, replay_batch, stream_capacity
+from repro.dynamic.tour import refresh_tour
+
+__all__ = [
+    "DynamicForest", "apply_batch", "edge_slots", "forest_empty",
+    "forest_from_graph", "init_state", "live_graph", "replay_batch",
+    "refresh_tour", "stream_capacity",
+]

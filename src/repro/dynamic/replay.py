@@ -1,0 +1,52 @@
+"""Replay helpers: drive a ``DynamicForest`` from an ``EdgeStream``.
+
+Shared by tests, the streaming example, ``launch.serve_stream``, and
+``benchmarks/table4_dynamic.py`` so they all apply batches identically:
+deletions resolve (u, v) pairs to pool slots via ``edge_slots``, then
+one jitted ``apply_batch`` call per batch.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.data.streams import EdgeStream, StreamBatch
+from repro.dynamic.forest import (DynamicForest, apply_batch, edge_slots,
+                                  forest_empty)
+
+
+def stream_capacity(stream: EdgeStream, slack: int = 0) -> int:
+    """Pool capacity that fits the stream's peak live-edge count."""
+    n = stream.n_nodes
+    live = int(stream.init_u.shape[0])
+    peak = live
+    for b in stream.batches:
+        live += int((b.ins_u < n).sum()) - int((b.del_u < n).sum())
+        peak = max(peak, live)
+    return max(peak + slack, 1)
+
+
+def init_state(stream: EdgeStream,
+               capacity: int | None = None) -> DynamicForest:
+    """Seed state holding the stream's initially-live edges."""
+    if capacity is None:
+        capacity = stream_capacity(stream)
+    state = forest_empty(stream.n_nodes, capacity)
+    if stream.init_u.shape[0]:
+        no_del = jnp.zeros((capacity,), jnp.bool_)
+        state, _ = apply_batch(state, jnp.asarray(stream.init_u),
+                               jnp.asarray(stream.init_v), no_del)
+    return state
+
+
+def replay_batch(state: DynamicForest, b: StreamBatch, **kwargs):
+    """Apply one stream batch: resolve deletions, then ``apply_batch``.
+
+    Returns (state', stats); stats gains ``deletes_found`` (int32 count
+    of delete requests that matched a live pool slot).
+    """
+    dmask, found = edge_slots(state, jnp.asarray(b.del_u),
+                              jnp.asarray(b.del_v))
+    state, stats = apply_batch(state, jnp.asarray(b.ins_u),
+                               jnp.asarray(b.ins_v), dmask, **kwargs)
+    stats["deletes_found"] = jnp.sum(found.astype(jnp.int32))
+    return state, stats

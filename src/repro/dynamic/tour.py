@@ -1,0 +1,92 @@
+"""Incremental Euler-tour refresh for the batch-dynamic forest.
+
+``euler.tour_numbering`` is the downstream substrate (preorder intervals
+for biconnectivity, subtree queries) and its dominant cost is the Wyllie
+list-ranking pass: ⌈log2(longest tour)/k⌉ + 1 doubling syncs over 2n
+slots. A batch usually touches a few components; re-ranking the whole
+forest wastes exactly the amortization the dynamic layer exists for.
+
+``refresh_tour`` recomputes the numbering only for *dirty* components
+(the component-closed mask ``DynamicForest.dirty`` maintained by
+``apply_batch``), JaJa-style (DESIGN.md §9):
+
+  1. mask the parent array so every clean vertex is a singleton — their
+     Euler lists are empty, so the ranking pass converges in
+     ⌈log2(longest *dirty* tour)/k⌉ + 1 syncs;
+  2. take per-vertex preorder keys from the fresh numbering for dirty
+     vertices and from the cached numbering for clean ones (relative
+     order within a clean component is unchanged by definition of clean);
+  3. re-densify globally with one (component, key) lexsort — cheap, no
+     doubling syncs — and carry sizes over the same split.
+
+The result is *bit-identical* to a full ``tour_numbering(parent)``
+recompute (both sort the same per-component preorders by the same
+component blocks; regression-tested in tests/test_dynamic.py), so
+consumers cannot tell incremental and full refreshes apart.
+
+``incremental=False`` forces the full recompute — the ablation switch
+``benchmarks/table4_dynamic.py`` uses to measure the crossover.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.euler import TourNumbering, tour_numbering
+from repro.dynamic.forest import DynamicForest
+
+
+def _clear_dirty(state: DynamicForest) -> DynamicForest:
+    return dataclasses.replace(
+        state, dirty=jnp.zeros((state.n_nodes,), jnp.bool_))
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def _merge_dirty(parent, rep, dirty, cached: TourNumbering, *,
+                 use_kernel: bool = False) -> TourNumbering:
+    n = parent.shape[0]
+    verts = jnp.arange(n, dtype=jnp.int32)
+
+    # Rank only the dirty sub-forest: clean vertices become singletons,
+    # whose Euler lists are empty (zero doubling work).
+    masked = jnp.where(dirty, parent, verts)
+    fresh = tour_numbering(masked, use_kernel=use_kernel)
+
+    # Per-component preorder keys: fresh where dirty, cached where clean.
+    # Keys are only ever compared within one component (lexsort is
+    # component-major), and both sources are injective there.
+    key = jnp.where(dirty, fresh.pre, cached.pre)
+    order = jnp.lexsort((key, rep)).astype(jnp.int32)
+    pre = jnp.zeros((n,), jnp.int32).at[order].set(verts)
+    size = jnp.where(dirty, fresh.size, cached.size)
+    return TourNumbering(pre=pre, size=size, last=pre + size - 1,
+                         comp=rep, parent=parent)
+
+
+def refresh_tour(state: DynamicForest,
+                 cached: TourNumbering | None = None, *,
+                 incremental: bool = True, use_kernel: bool = False):
+    """Refresh the tour numbering after one or more ``apply_batch`` calls.
+
+    Args:
+      state: the dynamic forest (its ``dirty`` mask names the components
+        whose tree changed since ``cached`` was computed).
+      cached: the numbering from the previous refresh. ``None`` forces a
+        full recompute (e.g. the first call after ``forest_from_graph``).
+      incremental: ablation flag — ``False`` always recomputes from
+        scratch (the ``table4_dynamic`` baseline).
+      use_kernel: route list ranking through the Pallas list_rank kernel.
+
+    Returns:
+      (numbering, state') — state' has its dirty mask cleared; pass it
+      (and the numbering) to the next refresh.
+    """
+    if cached is None or not incremental:
+        tn = tour_numbering(state.parent, use_kernel=use_kernel)
+        return tn, _clear_dirty(state)
+    tn = _merge_dirty(state.parent, state.rep, state.dirty, cached,
+                      use_kernel=use_kernel)
+    return tn, _clear_dirty(state)

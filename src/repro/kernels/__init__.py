@@ -15,6 +15,8 @@ Kernels (all validated in interpret mode on CPU; TPU is the target):
   frontier_relax BFS edge relaxation: frontier/undiscovered tests per edge.
   embed_bag      gather + segment-reduce (recsys embedding bag, GNN message
                  aggregation substrate).
+  segment_table  doubling sparse-table build for ``compress.segment_reduce``
+                 (slice-shift successor, whole table in one launch).
 """
 
 

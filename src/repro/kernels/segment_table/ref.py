@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for the segment_table kernel (the XLA build loop)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def segment_table_ref(values: jnp.ndarray, *, levels: int,
+                      op: str) -> jnp.ndarray:
+    """[levels + 1, n] table: row k holds op over values[i : i + 2^k]."""
+    combine = jnp.minimum if op == "min" else jnp.maximum
+    n = values.shape[0]
+    idx = jnp.arange(n, dtype=jnp.int32)
+    rows = [values]
+    t = values
+    for k in range(levels):
+        t = combine(t, t[jnp.minimum(idx + (1 << k), n - 1)])
+        rows.append(t)
+    return jnp.stack(rows)

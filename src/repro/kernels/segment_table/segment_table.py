@@ -1,0 +1,75 @@
+"""Doubling sparse-table Pallas kernel (the ``segment_reduce`` build).
+
+Level k of the table holds ``T[k][i] = op over values[i : i + 2^k]`` —
+payload-reduce ``jump_k`` on the shift successor ``i ↦ i + 2^k``
+(DESIGN.md §4). The build is depth-oblivious (exactly ⌈log2 n⌉ chained
+doubling steps, zero convergence syncs), so unlike the pointer_jump /
+list_rank pair there is no chain-vs-doubling split: one launch computes
+every level with the value table VMEM-resident, the same grid = 1
+whole-table layout as ``pointer_jump_double_pallas``.
+
+The shift successor is *static*, so each doubling step is a flat slice +
+identity-fill concatenate — no dynamic gather at all (a whole-table
+``jnp.take`` here costs quadratic interpret/compile time and buys
+nothing). Correctness of the slice form relies on pad slots carrying the
+op identity: boundary windows fold pad values instead of clamping to
+``n − 1``, and identity folds are no-ops exactly like the XLA path's
+idempotent clamp folds. The wrapper (``ops.segment_table``) owns that
+padding contract.
+
+Layout: values are viewed as a padded (rows, 128) matrix (8-sublane-
+aligned, DESIGN.md §5); the output stacks the levels + 1 table rows into
+a ((levels + 1) · rows, 128) matrix the wrapper reshapes to
+[levels + 1, n].
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANES = 128
+BLOCK_ROWS = 8
+
+
+def _segment_table_kernel(v_ref, out_ref, *, levels: int, fill, op: str):
+    combine = jnp.minimum if op == "min" else jnp.maximum
+    rows = v_ref.shape[0]
+    n_pad = rows * LANES
+    t = v_ref[...].reshape(-1)
+    out = [t]
+    for k in range(levels):
+        s = 1 << k
+        if s < n_pad:
+            shifted = jnp.concatenate(
+                [t[s:], jnp.full((s,), fill, t.dtype)])
+        else:
+            shifted = jnp.full((n_pad,), fill, t.dtype)
+        t = combine(t, shifted)
+        out.append(t)
+    out_ref[...] = jnp.concatenate(out).reshape((levels + 1) * rows, LANES)
+
+
+def segment_table_pallas(v2d: jnp.ndarray, *, levels: int, fill, op: str,
+                         interpret: bool = True) -> jnp.ndarray:
+    """v2d: [R, 128] padded values → [(levels + 1) · R, 128] table.
+
+    ``fill`` must be the op identity (max for min, min for max); pad
+    slots of ``v2d`` must already carry it.
+    """
+    rows = v2d.shape[0]
+    assert v2d.shape[1] == LANES and rows % BLOCK_ROWS == 0
+    kernel = functools.partial(_segment_table_kernel, levels=levels,
+                               fill=fill, op=op)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(((levels + 1) * rows, LANES),
+                                       v2d.dtype),
+        in_specs=[pl.BlockSpec((rows, LANES), lambda i: (0, 0))],
+        out_specs=pl.BlockSpec(((levels + 1) * rows, LANES),
+                               lambda i: (0, 0)),
+        grid=(1,),
+        interpret=interpret,
+    )(v2d)

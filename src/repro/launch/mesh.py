@@ -9,11 +9,22 @@ from __future__ import annotations
 import jax
 
 
+def auto_axis_kwargs(n_axes: int) -> dict:
+    """``axis_types=Auto`` where the jax version has it, ``{}`` otherwise.
+
+    ``jax.sharding.AxisType`` landed after 0.4.x; Auto is the pre-AxisType
+    default behavior, so omitting the kwarg on older jax is equivalent.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **auto_axis_kwargs(len(axes)))
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
@@ -22,4 +33,4 @@ def make_host_mesh(data: int = 1, model: int = 1):
     data = min(data, n)
     model = max(min(model, n // data), 1)
     return jax.make_mesh((data, model), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+                         **auto_axis_kwargs(2))

@@ -51,8 +51,9 @@ def test_async_save(tmp_path):
 def test_elastic_restore_resharding(tmp_path):
     """Restore onto explicit (trivial-mesh) shardings — the elastic path."""
     from jax.sharding import NamedSharding, PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+
+    from repro.launch.mesh import auto_axis_kwargs
+    mesh = jax.make_mesh((1,), ("data",), **auto_axis_kwargs(1))
     s = _state()
     ckpt.save(tmp_path, s, step=1)
     shardings = jax.tree.map(lambda _: NamedSharding(mesh, P()), s)

@@ -7,9 +7,10 @@ import jax.numpy as jnp
 import pytest
 from numpy.testing import assert_array_equal
 
-from repro.core.compress import (DEFAULT_JUMPS, compress_full, jump_k,
-                                 rank_to_root, reduce_to_root, roots_of,
-                                 segment_reduce, wyllie_rank)
+from repro.core.compress import (DEFAULT_JUMPS, compress_full,
+                                 compress_scoped, jump_k, rank_to_root,
+                                 reduce_to_root, roots_of, segment_reduce,
+                                 wyllie_rank)
 
 rng = np.random.default_rng(7)
 
@@ -180,17 +181,81 @@ def test_rank_to_root_routes_through_reduce_to_root(n_jumps):
     assert int(syncs) <= math.ceil(math.log2(max(max_depth, 2)) / n_jumps) + 1
 
 
+@pytest.mark.parametrize("use_kernel", [False, True])
 @pytest.mark.parametrize("op", ["min", "max"])
 @pytest.mark.parametrize("n", [1, 2, 64, 257])
-def test_segment_reduce_matches_numpy(op, n):
+def test_segment_reduce_matches_numpy(op, n, use_kernel):
     values = rng.integers(-1000, 1000, n).astype(np.int32)
     lo = rng.integers(0, n, 4 * n).astype(np.int32)
     hi = np.asarray([rng.integers(l, n) for l in lo], np.int32)
     out = segment_reduce(jnp.asarray(values), jnp.asarray(lo),
-                         jnp.asarray(hi), op)
+                         jnp.asarray(hi), op, use_kernel=use_kernel)
     npop = np.min if op == "min" else np.max
     expect = np.asarray([npop(values[l:h + 1]) for l, h in zip(lo, hi)])
     assert_array_equal(np.asarray(out), expect)
+
+
+@pytest.mark.parametrize("op", ["min", "max"])
+@pytest.mark.parametrize("n", [5, 129, 1025, 2000])
+def test_segment_table_kernel_matches_ref(op, n):
+    """The Pallas sparse-table build equals the jnp oracle, every level
+    (non-tile-multiple sizes exercise the identity padding contract)."""
+    from repro.kernels.segment_table.ops import segment_table
+    from repro.kernels.segment_table.ref import segment_table_ref
+
+    values = jnp.asarray(rng.integers(-1000, 1000, n).astype(np.int32))
+    levels = max(1, (n - 1).bit_length())
+    tab = segment_table(values, levels=levels, op=op)
+    ref = segment_table_ref(values, levels=levels, op=op)
+    assert tab.shape == (levels + 1, n)
+    assert_array_equal(np.asarray(tab), np.asarray(ref))
+
+
+@pytest.mark.parametrize("op", ["min", "max"])
+def test_segment_reduce_boundary_windows(op):
+    """Suffix queries near n exercise the off-the-end fold on both paths."""
+    n = 130                                     # just past one (8,128) tile
+    values = rng.integers(-50, 50, n).astype(np.int32)
+    lo = jnp.asarray([0, n - 1, n - 2, 1], jnp.int32)
+    hi = jnp.asarray([n - 1, n - 1, n - 1, n - 2], jnp.int32)
+    npop = np.min if op == "min" else np.max
+    expect = np.asarray([npop(values[l:h + 1])
+                         for l, h in zip(np.asarray(lo), np.asarray(hi))])
+    for use_kernel in (False, True):
+        out = segment_reduce(jnp.asarray(values), lo, hi, op,
+                             use_kernel=use_kernel)
+        assert_array_equal(np.asarray(out), expect, err_msg=str(use_kernel))
+
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_compress_scoped_matches_full_on_active(use_kernel):
+    """Scoped compression equals full compression on component-closed
+    masks and freezes everything else to identity."""
+    p_np = _forests(600)["random_forest"]
+    full = naive_compress(p_np)
+    # Component-closed mask: activate the components of roots 0..9.
+    active = np.isin(full, np.arange(10))
+    out = np.asarray(compress_scoped(jnp.asarray(p_np),
+                                     jnp.asarray(active),
+                                     use_kernel=use_kernel))
+    assert_array_equal(out[active], full[active])
+    assert_array_equal(out[~active], np.arange(600)[~active])
+
+
+def test_compress_scoped_sync_count_is_scoped():
+    """Syncs track the *active* sub-forest depth, not the global one."""
+    n = 2048
+    ids = np.arange(n)
+    chain = np.maximum(ids - 1, 0).astype(np.int32)  # depth n-1 chain
+    # Activate only the depth-≤3 prefix at the root end (closed under p).
+    active = np.zeros(n, bool)
+    active[:4] = True
+    _, syncs_scoped = compress_scoped(jnp.asarray(chain),
+                                      jnp.asarray(active),
+                                      return_syncs=True)
+    _, syncs_full = compress_full(jnp.asarray(chain), return_syncs=True)
+    assert int(syncs_scoped) < int(syncs_full)
+    assert int(syncs_scoped) <= 2
 
 
 def test_segment_reduce_rejects_non_idempotent_op():

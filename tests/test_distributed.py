@@ -21,7 +21,9 @@ from repro.data.graphs import grid2d, rmat
 out = {}
 
 # --- distributed connectivity + spanning forest --------------------------
-mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import auto_axis_kwargs
+
+mesh = jax.make_mesh((8,), ("data",), **auto_axis_kwargs(1))
 run = distributed_cc_spanning_forest(mesh, "data")
 for name, g in [("grid", grid2d(20)), ("rmat", rmat(9, 4, seed=2))]:
     m2 = g.n_half_edges
@@ -50,8 +52,7 @@ from repro.models import transformer as tfm
 from repro.optim.adamw import adamw_init
 from repro.launch.train import SMOKE_SHAPES, synthetic_batches
 
-mesh2 = jax.make_mesh((2, 4), ("data", "model"),
-                      axis_types=(jax.sharding.AxisType.Auto,)*2)
+mesh2 = jax.make_mesh((2, 4), ("data", "model"), **auto_axis_kwargs(2))
 spec = get_arch("qwen3-1.7b")
 cfg = spec.make_smoke_config()
 shape = dict(SMOKE_SHAPES["lm"])
@@ -60,7 +61,9 @@ step_fn, state_abs, _ = build_cell(spec, "smoke", mesh2, smoke=True)
 params = tfm.init_params(cfg, jax.random.key(0))
 state = {"params": params, "opt": adamw_init(params)}
 _, batch = next(synthetic_batches(spec, shape, cfg))
-with jax.set_mesh(mesh2):
+# jax.set_mesh is post-0.4.x; the Mesh context manager is the equivalent
+# pjit-era spelling for establishing the ambient mesh.
+with getattr(jax, "set_mesh", lambda m: m)(mesh2):
     new_state, metrics = jax.jit(step_fn)(state, batch)
 out["sharded_train"] = dict(loss=float(metrics["loss"]),
                             finite=bool(jnp.isfinite(metrics["loss"])))

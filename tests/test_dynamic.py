@@ -1,0 +1,267 @@
+"""Batch-dynamic forest: stream equivalence vs from-scratch, invariants,
+incremental tour refresh, multiset deletion resolution."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core.compress import roots_of
+from repro.core.euler import tour_numbering
+from repro.core.graph import Graph
+from repro.core.rst import rooted_spanning_tree
+from repro.core.validate import components_reference, validate_rst
+from repro.data import graphs as G
+from repro.data.streams import STREAMS
+from repro.dynamic import (apply_batch, edge_slots, forest_empty,
+                           forest_from_graph, init_state, live_graph,
+                           refresh_tour, replay_batch)
+
+
+def _partitions_equal(rep_a, rep_b, n, stride=1):
+    """Label-agnostic partition equality via canonical first-member maps."""
+    canon_a, canon_b = {}, {}
+    for v in range(0, n, stride):
+        ka, kb = int(rep_a[v]), int(rep_b[v])
+        if (ka in canon_a) != (kb in canon_b):
+            return False
+        if ka in canon_a:
+            if canon_a[ka] != canon_b[kb]:
+                return False
+        else:
+            canon_a[ka] = v
+            canon_b[kb] = v
+    return True
+
+
+def _check_state(state, live_pairs, tag=""):
+    """Full oracle check: invariants + equivalence with a rebuilt tree."""
+    n = state.n_nodes
+    parent = np.asarray(state.parent)
+    rep = np.asarray(state.rep)
+
+    # rep == roots_of(parent): the incremental-representative invariant.
+    assert_array_equal(rep, np.asarray(roots_of(state.parent)),
+                       err_msg=f"{tag}: rep invariant")
+
+    # Oracle graph from the python-side live multiset (no sentinel pad —
+    # the numpy union-find walks every edge row).
+    og = Graph.from_undirected(
+        n, np.asarray([e[0] for e in live_pairs], np.int32),
+        np.asarray([e[1] for e in live_pairs], np.int32))
+    ref = components_reference(og) if live_pairs else np.arange(n)
+    assert _partitions_equal(rep, ref, n), f"{tag}: component partition"
+
+    # Forest validity on the live graph (root of vertex 0's component).
+    lg = live_graph(state)
+    root = int(rep[0])
+    v = validate_rst(lg, parent, root, connected=False)
+    assert v["all_ok"], (tag, v)
+
+    # Tree-edge bookkeeping: exactly n - n_components marked slots.
+    ncomp = len(set(ref.tolist())) if live_pairs else n
+    assert int(np.asarray(state.tree_mask).sum()) == n - ncomp, tag
+
+    # Acceptance: spans the same components as a from-scratch build.
+    scratch = rooted_spanning_tree(lg, root, method="gconn_euler")
+    rep_s = np.asarray(roots_of(scratch.parent))
+    assert _partitions_equal(rep, rep_s, n), f"{tag}: vs from-scratch"
+
+
+def _live_oracle(stream):
+    """Replay the stream's batches over a python multiset."""
+    n = stream.n_nodes
+    live = [(int(a), int(b))
+            for a, b in zip(stream.init_u, stream.init_v)]
+    for b in stream.batches:
+        for a, c in zip(b.del_u, b.del_v):
+            if a < n:
+                key = (int(a), int(c))
+                if key in live:
+                    live.remove(key)
+                else:
+                    live.remove((int(c), int(a)))
+        for a, c in zip(b.ins_u, b.ins_v):
+            if a < n:
+                live.append((int(a), int(c)))
+        yield live
+
+
+@pytest.mark.parametrize("stream_name", list(STREAMS))
+@pytest.mark.parametrize("graph_name", ["grid", "rmat"])
+def test_stream_equivalence(stream_name, graph_name):
+    """Acceptance: after any batch sequence from any generator, the
+    maintained parent spans the same components as a from-scratch build
+    on the final live graph."""
+    g = G.grid2d(12) if graph_name == "grid" else G.rmat(7, 4, seed=2)
+    stream = STREAMS[stream_name](g, batch=16, seed=3, n_batches=8)
+    state = init_state(stream)
+    oracle = _live_oracle(stream)
+    for step, b in enumerate(stream.batches):
+        state, stats = replay_batch(state, b)
+        live = next(oracle)
+        assert int(stats["overflow"]) == 0
+        if step % 3 == 2 or step == len(stream.batches) - 1:
+            _check_state(state, live, f"{stream_name}/{graph_name}@{step}")
+
+
+def test_insertions_from_empty_match_reference():
+    """Pure-insert replay from the empty forest tracks union-find."""
+    rng = np.random.default_rng(11)
+    n = 80
+    st = forest_empty(n, capacity=128)
+    edges = []
+    for step in range(8):
+        iu = rng.integers(0, n, 8).astype(np.int32)
+        iv = rng.integers(0, n, 8).astype(np.int32)
+        st, _ = apply_batch(st, jnp.asarray(iu), jnp.asarray(iv),
+                            jnp.zeros((128,), jnp.bool_))
+        edges += [(int(a), int(b)) for a, b in zip(iu, iv) if a != b]
+        _check_state(st, edges, f"insert@{step}")
+
+
+def test_tree_edge_deletion_finds_replacement():
+    """Deleting a tree edge on a cycle keeps the component connected."""
+    n = 6
+    ring = [(i, (i + 1) % n) for i in range(n)]
+    g = Graph.from_numpy_undirected(n, np.asarray(ring))
+    st = forest_from_graph(g, capacity=n + 2)
+    tree_slots = np.nonzero(np.asarray(st.tree_mask))[0]
+    # Delete one tree edge: the remaining ring edge must replace it.
+    du = np.asarray([int(np.asarray(st.pool_src)[tree_slots[0]])], np.int32)
+    dv = np.asarray([int(np.asarray(st.pool_dst)[tree_slots[0]])], np.int32)
+    dmask, found = edge_slots(st, jnp.asarray(du), jnp.asarray(dv))
+    assert bool(np.asarray(found)[0])
+    st, stats = apply_batch(st, jnp.full(1, n, jnp.int32),
+                            jnp.full(1, n, jnp.int32), dmask)
+    assert int(stats["cuts"]) == 1
+    assert int(stats["links"]) == 1              # replacement found
+    assert int(st.n_components) == 1
+    _check_state(st, ring[1:], "ring-delete")
+
+    # Delete a second edge: the ring is now a path; cutting disconnects.
+    live = [(int(a), int(b)) for a, b in
+            zip(np.asarray(st.pool_src), np.asarray(st.pool_dst))
+            if a < n]
+    dmask2, found2 = edge_slots(
+        st, jnp.asarray([live[0][0]], jnp.int32),
+        jnp.asarray([live[0][1]], jnp.int32))
+    assert bool(np.asarray(found2)[0])
+    st, stats = apply_batch(st, jnp.full(1, n, jnp.int32),
+                            jnp.full(1, n, jnp.int32), dmask2)
+    assert int(st.n_components) == 2
+    _check_state(st, live[1:], "path-delete")
+
+
+def test_forest_from_graph_matches_static():
+    g = G.erdos_renyi(200, avg_degree=4, seed=5)
+    st = forest_from_graph(g, capacity=g.n_edges)
+    live = [(int(a), int(b)) for a, b in
+            zip(np.asarray(g.src[:g.n_edges]), np.asarray(g.dst[:g.n_edges]))]
+    _check_state(st, live, "from_graph")
+    # Connected suite graph, default root 0 ⇒ rooted at the request.
+    assert int(np.asarray(st.parent)[0]) == 0
+    assert (np.asarray(st.rep) == 0).all()
+
+
+def test_edge_slots_multiset_resolution():
+    """k delete requests for one pair claim k distinct parallel copies."""
+    n = 10
+    st = forest_empty(n, capacity=8)
+    # Insert three parallel (2, 7) copies and one (1, 2).
+    iu = jnp.asarray([2, 7, 2, 1, n, n], jnp.int32)
+    iv = jnp.asarray([7, 2, 7, 2, n, n], jnp.int32)
+    st, _ = apply_batch(st, iu, iv, jnp.zeros((8,), jnp.bool_))
+    assert int(st.n_live_edges) == 4
+
+    du = jnp.asarray([7, 2, 2, 2], jnp.int32)   # (7,2) ×1 + (2,7) ×3
+    dv = jnp.asarray([2, 7, 7, 7], jnp.int32)
+    dmask, found = edge_slots(st, du, dv)
+    # Only three parallel copies exist: 3 found, 1 not, distinct slots.
+    assert int(np.asarray(found).sum()) == 3
+    assert int(np.asarray(dmask).sum()) == 3
+    st, stats = apply_batch(st, jnp.full(4, n, jnp.int32),
+                            jnp.full(4, n, jnp.int32), dmask)
+    # (1, 2) survives; 2 and 7 are now disconnected.
+    rep = np.asarray(st.rep)
+    assert rep[1] == rep[2] and rep[2] != rep[7]
+
+
+def test_delete_nonexistent_is_noop():
+    g = G.grid2d(5)
+    st = forest_from_graph(g, capacity=g.n_edges + 4)
+    dmask, found = edge_slots(st, jnp.asarray([0, 3], jnp.int32),
+                              jnp.asarray([24, 3], jnp.int32))
+    assert not bool(np.asarray(found).any())     # non-edge + self-loop
+    st2, stats = apply_batch(st, jnp.full(2, 25, jnp.int32),
+                             jnp.full(2, 25, jnp.int32), dmask)
+    assert int(stats["cuts"]) == 0
+    assert_array_equal(np.asarray(st2.parent), np.asarray(st.parent))
+
+
+def test_pool_overflow_is_counted():
+    st = forest_empty(4, capacity=2)
+    iu = jnp.asarray([0, 1, 2], jnp.int32)
+    iv = jnp.asarray([1, 2, 3], jnp.int32)
+    st, stats = apply_batch(st, iu, iv, jnp.zeros((2,), jnp.bool_))
+    assert int(stats["overflow"]) == 1
+    assert int(st.n_live_edges) == 2
+
+
+@pytest.mark.parametrize("stream_name", ["sliding_window", "churn"])
+def test_incremental_tour_matches_full(stream_name):
+    """Acceptance: the dirty-component refresh is bit-identical to a full
+    ``tour_numbering`` recompute after every refresh."""
+    g = G.grid2d(9)
+    stream = STREAMS[stream_name](g, batch=12, seed=7, n_batches=9)
+    state = init_state(stream)
+    tn, state = refresh_tour(state, None)
+    for step, b in enumerate(stream.batches):
+        state, _ = replay_batch(state, b)
+        if step % 2 == 1:
+            tn, state = refresh_tour(state, tn, incremental=True)
+            full = tour_numbering(state.parent)
+            for field in ("pre", "size", "last", "comp"):
+                assert_array_equal(
+                    np.asarray(getattr(tn, field)),
+                    np.asarray(getattr(full, field)),
+                    err_msg=f"{stream_name}@{step}: {field}")
+            assert not bool(np.asarray(state.dirty).any())
+
+
+def test_dirty_marks_are_component_closed_and_scoped():
+    """A batch touching one component leaves others clean."""
+    # Two separate triangles; update only the second.
+    edges = np.asarray([(0, 1), (1, 2), (2, 0), (3, 4), (4, 5), (5, 3)])
+    g = Graph.from_numpy_undirected(6, edges)
+    st = forest_from_graph(g, capacity=8)
+    _, st = refresh_tour(st, None)
+    dmask, found = edge_slots(st, jnp.asarray([3], jnp.int32),
+                              jnp.asarray([4], jnp.int32))
+    assert bool(np.asarray(found)[0])
+    st, _ = apply_batch(st, jnp.full(1, 6, jnp.int32),
+                        jnp.full(1, 6, jnp.int32), dmask)
+    dirty = np.asarray(st.dirty)
+    assert not dirty[[0, 1, 2]].any()            # first triangle untouched
+    assert dirty[[3, 4, 5]].all()                # whole touched component
+
+
+def test_stream_generators_shapes_and_conservation():
+    """Batches have fixed shapes; deletes only reference live edges."""
+    g = G.grid2d(8)
+    n = g.n_nodes
+    for name, gen in STREAMS.items():
+        stream = gen(g, batch=16, seed=0, n_batches=5)
+        live = {(int(a), int(b))
+                for a, b in zip(stream.init_u, stream.init_v)}
+        for b in stream.batches:
+            assert b.ins_u.shape == (16,) and b.del_u.shape == (16,)
+            for a, c in zip(b.del_u, b.del_v):
+                if a < n:
+                    pair = (int(a), int(c))
+                    assert pair in live or pair[::-1] in live, (name, pair)
+                    live.discard(pair)
+                    live.discard(pair[::-1])
+            for a, c in zip(b.ins_u, b.ins_v):
+                if a < n:
+                    live.add((int(a), int(c)))
+        assert stream.n_events > 0

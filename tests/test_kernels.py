@@ -47,6 +47,22 @@ def test_list_rank_sweep(n, k):
     assert_array_equal(np.asarray(d1), np.asarray(d2))
 
 
+@pytest.mark.parametrize("n", [3, 64, 1025, 5000])
+@pytest.mark.parametrize("op", ["min", "max"])
+@pytest.mark.parametrize("dtype", [jnp.int32, jnp.float32])
+def test_segment_table_sweep(n, op, dtype):
+    from repro.kernels.segment_table.ops import segment_table
+    from repro.kernels.segment_table.ref import segment_table_ref
+    if dtype == jnp.int32:
+        v = jnp.asarray(rng.integers(-9999, 9999, n), dtype)
+    else:
+        v = jnp.asarray(rng.standard_normal(n), dtype)
+    levels = max(1, (n - 1).bit_length())
+    tab = segment_table(v, levels=levels, op=op)
+    ref = segment_table_ref(v, levels=levels, op=op)
+    assert_array_equal(np.asarray(tab), np.asarray(ref))
+
+
 @pytest.mark.parametrize("n,e", [(10, 17), (300, 1111), (1024, 4096)])
 @pytest.mark.parametrize("use_min", [True, False])
 def test_hook_edges_sweep(n, e, use_min):

@@ -116,6 +116,36 @@ def test_rooted_at_requested_root():
             assert int(res.parent[root]) == root
 
 
+def test_connectivity_multigraph_honesty():
+    """Multigraph regression (parallel edges + self-loops, no dedupe):
+    forest_mask never marks two half-edges of one vertex pair, never a
+    self-loop, and always exactly n - n_components slots."""
+    rng = np.random.default_rng(13)
+    for trial in range(8):
+        n = int(rng.integers(3, 40))
+        m = int(rng.integers(1, 120))
+        u = rng.integers(0, n, m)
+        v = np.where(rng.random(m) < 0.2, u, rng.integers(0, n, m))  # loops
+        dup = rng.integers(0, m, m // 3)                 # parallel copies
+        u = np.concatenate([u, u[dup]])
+        v = np.concatenate([v, v[dup]])
+        for alt in (False, True):
+            g = Graph.from_undirected(n, jnp.asarray(u, jnp.int32),
+                                      jnp.asarray(v, jnp.int32))
+            rep, forest, _ = connected_components(g, alternate_hooking=alt)
+            fm = np.asarray(forest)
+            src = np.asarray(g.src)
+            dst = np.asarray(g.dst)
+            marked = [(min(src[e], dst[e]), max(src[e], dst[e]))
+                      for e in np.nonzero(fm)[0]]
+            ncomp = len(set(components_reference(g).tolist()))
+            assert len(marked) == n - ncomp, (trial, alt)
+            assert len(marked) == len(set(marked)), (trial, alt, marked)
+            assert all(a != b for a, b in marked), (trial, alt, marked)
+            # Canonical-half guarantee: winners live in slots [0, M).
+            assert (np.nonzero(fm)[0] < g.n_edges).all(), (trial, alt)
+
+
 def test_use_kernel_paths_agree():
     g = G.erdos_renyi(256, avg_degree=5, seed=9)
     p1, d1, l1 = bfs_rst(g, 3, use_kernel=False)
