@@ -9,6 +9,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
                       (the Tarjan–Vishkin layer, DESIGN.md §4)
   table4_dynamic/*    batch-dynamic maintenance vs from-scratch rebuild per
                       stream × batch size (DESIGN.md §9)
+  table5_dynamic_bcc/* incremental vs recomputed biconnectivity on the
+                      dynamic pool, with sync/round counts (DESIGN.md §10)
   kernels/*           Pallas kernel micro-benchmarks (incl. compress_* engine
                       rows; interpret mode off-TPU)
   ablation_compress/* amortized vs per-hop convergence checks (engine k=5
@@ -98,7 +100,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (ablation_hooking, fig1_runtime, fig2_depth,
                             table1_steps, table2_stats, table3_bcc,
-                            table4_dynamic)
+                            table4_dynamic, table5_dynamic_bcc)
     from benchmarks.common import rows_to_records
 
     if args.smoke:
@@ -125,6 +127,7 @@ def main(argv=None) -> None:
     emit(fig1_runtime.run(suite))
     emit(table3_bcc.run(suite))
     emit(table4_dynamic.run(suite))
+    emit(table5_dynamic_bcc.run(suite))
     emit(ablation_hooking.run(suite))
     emit(kernel_microbench(micro_n))
     emit(compress_microbench(micro_n))

@@ -1,0 +1,111 @@
+"""Table V (extension): incremental vs recomputed biconnectivity per batch.
+
+``table3_bcc`` measures the static Tarjan–Vishkin layer; ``table4_dynamic``
+measures forest maintenance vs rebuild. This table closes the loop the
+paper's motivation opens — RST as the *substrate for biconnectivity* — in
+the streaming regime (DESIGN.md §10): per stream × batch size, is
+maintaining the pool's BCC labels under dirty-component scoping cheaper
+than recomputing the decomposition from scratch?
+
+Rows (median over the paper's 1 + 5 methodology, steady-state batch):
+
+  table5_dynamic_bcc/{graph}/{stream}/b{B}/incremental
+      one ``dynamic.replay_batch`` + incremental ``refresh_tour`` +
+      incremental ``refresh_bcc`` (snapshot-diff dirty scoping)
+  table5_dynamic_bcc/{graph}/{stream}/b{B}/recompute
+      the same batch + full ``tour_numbering`` + full ``refresh_bcc``
+      over the same live pool
+
+derived: ``sync_total`` = low/high doubling levels built + aux-graph
+GConn rounds — the device-independent step counts. XLA-CPU wall-clock is
+volume-bound (every array op touches all n vertices regardless of
+scope), so the sync counts are the tracked advantage for device
+backends; ``scripts/bench_smoke.sh`` asserts incremental < recompute on
+the chain-regime sliding_window rows, where dirty components are a small
+fraction of the graph.
+"""
+from __future__ import annotations
+
+import jax
+
+from benchmarks.common import csv_row, time_fn
+from repro.core.euler import tour_numbering
+from repro.data.graphs import build_suite
+from repro.data.streams import STREAMS
+from repro.dynamic import init_state, refresh_bcc, refresh_tour, replay_batch
+
+#: streams measured: sliding_window keeps components small (the scoped
+#: sweet spot), churn dirties large fractions (the honest worst case).
+_STREAM_NAMES = ("sliding_window", "churn")
+
+
+def _batches_for(n: int) -> tuple[int, ...]:
+    return (4, 16) if n <= 1024 else (16, 256)
+
+
+def _steady_state(stream, warm_batches: int):
+    """Advance a few batches so timing sees steady state, not cold start."""
+    state = init_state(stream)
+    for b in stream.batches[:warm_batches]:
+        state, _ = replay_batch(state, b)
+    tn, state = refresh_tour(state, None)
+    bcc = refresh_bcc(state, None, tour=tn)
+    return state, tn, bcc
+
+
+def run(suite=None) -> list[str]:
+    rows = []
+    suite = suite or build_suite(["grid_64", "rmat_14"])
+    for name, g in suite.items():
+        for stream_name in _STREAM_NAMES:
+            for batch in _batches_for(g.n_nodes):
+                stream = STREAMS[stream_name](g, batch=batch, seed=0,
+                                              n_batches=6)
+                if len(stream.batches) < 2:
+                    continue
+                state, tn, bcc = _steady_state(stream,
+                                               len(stream.batches) - 1)
+                b = stream.batches[-1]
+                events = int((b.ins_u < g.n_nodes).sum()
+                             + (b.del_u < g.n_nodes).sum())
+
+                # replay_batch / refresh_* are functional: timing repeats
+                # the same batch from the same pre-state.
+                def incr():
+                    s2, _ = replay_batch(state, b)
+                    tn2, s2 = refresh_tour(s2, tn, incremental=True)
+                    b2 = refresh_bcc(s2, bcc, tour=tn2, incremental=True)
+                    return b2
+
+                bcc_i = jax.block_until_ready(incr())
+                t_incr = time_fn(lambda: jax.block_until_ready(incr()))
+
+                def scratch():
+                    s2, _ = replay_batch(state, b)
+                    tn2 = tour_numbering(s2.parent)
+                    b2 = refresh_bcc(s2, None, tour=tn2,
+                                     incremental=False)
+                    return b2
+
+                bcc_f = jax.block_until_ready(scratch())
+                t_scr = time_fn(lambda: jax.block_until_ready(scratch()))
+                assert int(bcc_i.n_bcc) == int(bcc_f.n_bcc)  # bit-identity
+
+                base = f"table5_dynamic_bcc/{name}/{stream_name}/b{batch}"
+                for tag, t, bc in (("incremental", t_incr, bcc_i),
+                                   ("recompute", t_scr, bcc_f)):
+                    sync_total = int(bc.seg_syncs) + int(bc.aux_rounds)
+                    rows.append(csv_row(
+                        f"{base}/{tag}", t * 1e6,
+                        f"updates_per_sec={events / max(t, 1e-9):.0f};"
+                        f"sync_total={sync_total};"
+                        f"seg_syncs={int(bc.seg_syncs)};"
+                        f"aux_rounds={int(bc.aux_rounds)};"
+                        f"dirty={int(bc.dirty_count)};"
+                        f"n_bcc={int(bc.n_bcc)};"
+                        f"bridges={int(bc.n_bridges)}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,8 +1,14 @@
 #!/usr/bin/env sh
 # Fast perf-path exercise for CI: one tiny graph per fig/table + small
 # microbenches, rows also written to BENCH_rst.json. Asserts the
-# biconnectivity rows (table3/*, DESIGN.md §4) actually landed so the
-# downstream layer can't silently drop out of the perf trajectory.
+# biconnectivity rows (table3/*, DESIGN.md §4), the batch-dynamic rows
+# (table4_dynamic/*, §9), and the incremental-BCC rows
+# (table5_dynamic_bcc/*, §10) actually landed so the downstream layers
+# can't silently drop out of the perf trajectory — and asserts the
+# *sync/round counts* of the incremental BCC refresh beat the full
+# recompute on the chain-regime sliding_window rows. Wall-clock on the
+# XLA-CPU CI backend is volume-bound, so the sync counts are the
+# device-independent advantage this guard keeps honest without a GPU.
 set -e
 cd "$(dirname "$0")/.."
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
@@ -16,4 +22,41 @@ if ! grep -q '"name": "table4_dynamic/' BENCH_rst.json; then
     echo "bench_smoke: no table4_dynamic/* batch-dynamic row in BENCH_rst.json" >&2
     exit 1
 fi
-echo "bench_smoke: ok (table3 + table4_dynamic smoke rows present)"
+if ! grep -q '"name": "table5_dynamic_bcc/' BENCH_rst.json; then
+    echo "bench_smoke: no table5_dynamic_bcc/* incremental-BCC row in BENCH_rst.json" >&2
+    exit 1
+fi
+
+python - <<'EOF'
+import json, re, sys
+
+records = {r["name"]: r for r in json.load(open("BENCH_rst.json"))}
+
+def sync_total(rec):
+    m = re.search(r"sync_total=(\d+)", rec["derived"])
+    assert m, f"no sync_total in {rec['name']}: {rec['derived']}"
+    return int(m.group(1))
+
+pairs = 0
+for name, rec in records.items():
+    if not name.startswith("table5_dynamic_bcc/"):
+        continue
+    if "/sliding_window/" not in name or "chain" not in name:
+        continue
+    if not name.endswith("/incremental"):
+        continue
+    full = records.get(name[: -len("incremental")] + "recompute")
+    assert full is not None, f"missing recompute twin for {name}"
+    si, sf = sync_total(rec), sync_total(full)
+    if si >= sf:
+        sys.exit(f"bench_smoke: incremental BCC sync count regressed: "
+                 f"{name} has sync_total={si} >= recompute {sf}")
+    print(f"bench_smoke: {name}: sync_total {si} < recompute {sf}")
+    pairs += 1
+
+if pairs == 0:
+    sys.exit("bench_smoke: no chain-regime sliding_window table5 row pairs "
+             "found to compare")
+EOF
+
+echo "bench_smoke: ok (table3 + table4_dynamic + table5_dynamic_bcc rows present, incremental BCC sync counts ahead)"

@@ -1,11 +1,12 @@
 """Core library: the paper's rooted-spanning-tree primitives in JAX."""
 from repro.core.graph import Graph, build_csr
-from repro.core.bcc import BCCResult, bcc_batch, bcc_from_parent, biconnectivity
+from repro.core.bcc import (BCCResult, bcc_batch, bcc_from_parent,
+                            bcc_from_tour, biconnectivity)
 from repro.core.bfs import bfs_rst
 from repro.core.compress import (DEFAULT_JUMPS, compress_full,
                                  compress_scoped, jump_k, rank_to_root,
                                  reduce_to_root, roots_of, segment_reduce,
-                                 wyllie_rank)
+                                 segment_reduce_scoped, wyllie_rank)
 from repro.core.connectivity import connected_components, pointer_jump_full
 from repro.core.euler import (TourNumbering, euler_tour_root,
                               list_rank_dist_to_end, tour_numbering)
@@ -18,11 +19,12 @@ __all__ = [
     "Graph", "build_csr", "bfs_rst", "connected_components",
     "pointer_jump_full", "euler_tour_root", "list_rank_dist_to_end",
     "TourNumbering", "tour_numbering",
-    "BCCResult", "bcc_batch", "bcc_from_parent", "biconnectivity",
+    "BCCResult", "bcc_batch", "bcc_from_parent", "bcc_from_tour",
+    "biconnectivity",
     "pr_rst", "METHODS", "RSTResult", "gconn_euler_rst",
     "rooted_spanning_tree", "tree_depth",
     "DEFAULT_JUMPS", "compress_full", "compress_scoped", "jump_k",
     "rank_to_root", "reduce_to_root", "roots_of", "segment_reduce",
-    "wyllie_rank",
+    "segment_reduce_scoped", "wyllie_rank",
     "link_components", "mark_paths", "reverse_and_graft",
 ]

@@ -32,9 +32,23 @@ exactly 2M + 2n slots (one per non-tree half-edge candidate, two per tree
 edge), padded with the usual ``src = dst = n`` sentinels. ``bcc_batch``
 vmaps the whole stack for the many-small-graphs serving scenario.
 
-Multigraph caveat: parent arrays cannot distinguish parallel copies of a
-tree edge, so inputs must be simple graphs — which
+The module is layered so the static and incremental paths share one
+auxiliary-graph construction (DESIGN.md §10): ``bcc_from_tour`` is the
+tour-driven core — it consumes an existing ``TourNumbering`` instead of
+recomputing one, takes an optional explicit per-half-edge ``tree_mask``
+(the multigraph-honest classification the dynamic edge pool maintains),
+and an optional component-closed ``scope`` mask that restricts every
+phase (low/high via ``segment_reduce_scoped``, aux rules, GConn
+labeling) to dirty components. ``bcc_from_parent`` / ``biconnectivity``
+/ ``bcc_batch`` are the static entry points on top of it;
+``repro.dynamic.bcc`` is the incremental one.
+
+Multigraph caveat (static entry points only): parent arrays cannot
+distinguish parallel copies of a tree edge, so *inferred* tree
+classification requires simple graphs — which
 ``Graph.from_numpy_undirected`` (dedup + self-loop removal) guarantees.
+Callers that know the classification (the dynamic layer's ``tree_mask``)
+may pass it explicitly and feed multigraphs to ``bcc_from_tour``.
 """
 from __future__ import annotations
 
@@ -44,7 +58,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.core.compress import segment_reduce
+from repro.core.compress import segment_reduce, segment_reduce_scoped
 from repro.core.connectivity import connected_components
 from repro.core.euler import tour_numbering
 from repro.core.graph import Graph
@@ -72,6 +86,9 @@ class BCCResult:
       rst_steps:    int32 — parallel steps of the upstream RST build
                     (levels or rounds; the paper's Table I counts).
       aux_rounds:   int32 — GConn hook/compress rounds on the aux graph.
+      seg_syncs:    int32 — doubling levels built for the low/high
+                    sparse tables (both builds; the device-independent
+                    cost the dynamic benchmarks compare, DESIGN.md §10).
       method:       static str — the ``rst_flavor`` that built the tree.
     """
 
@@ -85,12 +102,13 @@ class BCCResult:
     high: jnp.ndarray
     rst_steps: jnp.ndarray
     aux_rounds: jnp.ndarray
+    seg_syncs: jnp.ndarray
     method: str = "gconn_euler"
 
     def tree_flatten(self):
         children = (self.articulation, self.bridge, self.edge_bcc,
                     self.n_bcc, self.pre, self.size, self.low, self.high,
-                    self.rst_steps, self.aux_rounds)
+                    self.rst_steps, self.aux_rounds, self.seg_syncs)
         return children, self.method
 
     @classmethod
@@ -98,30 +116,51 @@ class BCCResult:
         return cls(*children, method=aux)
 
 
-@partial(jax.jit, static_argnames=("use_kernel",))
-def bcc_from_parent(graph: Graph, parent: jnp.ndarray, *,
-                    use_kernel: bool = False):
-    """Tarjan–Vishkin biconnectivity from an already-built parent array.
+def bcc_from_tour(graph: Graph, parent: jnp.ndarray, tn, *,
+                  tree_mask: jnp.ndarray | None = None,
+                  scope: jnp.ndarray | None = None,
+                  use_kernel: bool = False):
+    """Tarjan–Vishkin core driven by an existing ``TourNumbering``.
 
-    The decomposition covers exactly the subgraph the forest spans:
-    vertices the parent array leaves unspanned (BFS's unreachable −1)
-    contribute no aux vertices, their incident edges carry label −1 and
-    are never bridges, and they are never articulation points. Forest
-    flavors (gconn_euler, pr_rst) span every component, so they decompose
-    the whole graph; BFS decomposes the root's component only.
+    The shared auxiliary-graph construction under every entry point
+    (DESIGN.md §10): the static wrappers below call it with a freshly
+    computed numbering and no scope; ``repro.dynamic.bcc`` calls it with
+    the maintained numbering, the pool's explicit tree classification,
+    and the dirty-component scope.
+
+    Traced through the caller's jit (optional arrays resolve to code
+    paths at trace time, so this function is not jitted itself).
 
     Args:
-      graph: Graph (paired half-edges; padding rows ``src == dst == n``).
-      parent: int32[n] rooted spanning forest of ``graph`` (roots
+      graph: Graph (paired half-edges; padding rows ``src == dst == n``;
+        may be a multigraph iff ``tree_mask`` is explicit).
+      parent: int32[n] rooted forest ``tn`` was built from (roots
         self-point; negative entries mark unspanned vertices).
-      use_kernel: route engine phases through their Pallas kernels.
+      tn: ``euler.TourNumbering`` of ``parent`` — NOT recomputed here.
+      tree_mask: optional bool[2M] — explicit per-half-edge tree
+        classification (both halves of a tree edge True; at most one
+        pool copy per vertex pair, the ``DynamicForest.tree_mask``
+        invariant). ``None`` infers tree edges from ``parent`` endpoint
+        adjacency, which is only sound on simple graphs.
+      scope: optional bool[n] component-closed activity mask. When
+        given, edges and vertices outside ``scope`` are treated as
+        padding everywhere: their low/high/labels/articulation outputs
+        are *garbage to be merged from a cache by the caller*, the
+        low/high tables build only to the longest scoped component
+        (``segment_reduce_scoped``), and the aux GConn pass hooks
+        nothing outside the scope — clean components cost zero doubling
+        work. ``n_bcc`` is only meaningful for ``scope=None``.
+      use_kernel: route engine phases through their Pallas kernels
+        (the scoped low/high build is XLA-only, see
+        ``segment_reduce_scoped``).
 
     Returns:
-      dict with the BCCResult fields except ``rst_steps``/``method``.
+      dict with keys articulation, bridge, edge_bcc, rep (int32[n]
+      aux-component label per vertex — the label of the tree edge above
+      v), n_bcc, low, high, aux_rounds, seg_syncs.
     """
     n = graph.n_nodes
     verts = jnp.arange(n, dtype=jnp.int32)
-    tn = tour_numbering(parent, use_kernel=use_kernel)
     pre, size, par = tn.pre, tn.size, tn.parent
     nonroot = par != verts
     spanned = parent >= 0
@@ -133,7 +172,16 @@ def bcc_from_parent(graph: Graph, parent: jnp.ndarray, *,
     # Edges touching unspanned vertices sit outside the decomposed
     # subgraph — treat them exactly like padding.
     pad = pad | ~spanned[sc] | ~spanned[dc]
-    is_tree = ~pad & ((par[dc] == sc) | (par[sc] == dc))
+    if scope is None:
+        in_scope = jnp.ones((n,), jnp.bool_)
+    else:
+        # Component-closed: ``scope[sc] == scope[dc]`` on real edges.
+        in_scope = scope
+        pad = pad | ~in_scope[sc] | ~in_scope[dc]
+    if tree_mask is None:
+        is_tree = ~pad & ((par[dc] == sc) | (par[sc] == dc))
+    else:
+        is_tree = ~pad & tree_mask
     nontree = ~pad & ~is_tree
 
     # loc extremes: own preorder plus preorder over one non-tree edge.
@@ -143,11 +191,23 @@ def bcc_from_parent(graph: Graph, parent: jnp.ndarray, *,
     loc_high = pre.at[tgt].max(jnp.where(nontree, pre[dc], -1), mode="drop")
 
     # Subtree reduction = contiguous-interval reduction in preorder layout
-    # (engine payload-reduce doubling table, DESIGN.md §4).
+    # (engine payload-reduce doubling table, DESIGN.md §4). Scoped
+    # components occupy contiguous preorder blocks, so the scoped build
+    # covers every active query with ⌈log2(max scoped comp size)⌉ levels.
     a_low = jnp.zeros((n,), jnp.int32).at[pre].set(loc_low)
     a_high = jnp.zeros((n,), jnp.int32).at[pre].set(loc_high)
-    low = segment_reduce(a_low, pre, tn.last, "min", use_kernel=use_kernel)
-    high = segment_reduce(a_high, pre, tn.last, "max", use_kernel=use_kernel)
+    if scope is None:
+        low = segment_reduce(a_low, pre, tn.last, "min",
+                             use_kernel=use_kernel)
+        high = segment_reduce(a_high, pre, tn.last, "max",
+                              use_kernel=use_kernel)
+        seg_syncs = jnp.int32(2 * max(1, (n - 1).bit_length()))
+    else:
+        low, s_lo = segment_reduce_scoped(a_low, pre, tn.last, in_scope,
+                                          "min", return_syncs=True)
+        high, s_hi = segment_reduce_scoped(a_high, pre, tn.last, in_scope,
+                                           "max", return_syncs=True)
+        seg_syncs = s_lo + s_hi
 
     # Aux edges. R1: unrelated non-tree edges (order by preorder so each
     # undirected edge contributes once; the reverse half-edge is inert).
@@ -157,8 +217,8 @@ def bcc_from_parent(graph: Graph, parent: jnp.ndarray, *,
     # subtree(v) escapes below (low) or beyond (high) w's interval.
     w = par
     w_nonroot = par[w] != w
-    r2 = nonroot & w_nonroot & (low < pre[w])
-    r3 = nonroot & w_nonroot & (high >= pre[w] + size[w])
+    r2 = nonroot & in_scope & w_nonroot & (low < pre[w])
+    r3 = nonroot & in_scope & w_nonroot & (high >= pre[w] + size[w])
 
     aux_src = jnp.concatenate([jnp.where(r1, sc, n),
                                jnp.where(r2, verts, n),
@@ -182,7 +242,8 @@ def bcc_from_parent(graph: Graph, parent: jnp.ndarray, *,
     # Articulation: ≥ 2 distinct block labels incident. Non-tree edges
     # never contribute a label their endpoint's tree edges don't already
     # carry, so it suffices to compare each vertex's own tree-edge label
-    # with its children's.
+    # with its children's. (Children share their parent's component, so
+    # a scoped vertex only ever aggregates scoped children.)
     ptgt = jnp.where(nonroot, par, n)
     child_lab = jnp.where(nonroot, rep, INF32)
     mn = jnp.full((n,), INF32, jnp.int32).at[ptgt].min(child_lab,
@@ -195,12 +256,45 @@ def bcc_from_parent(graph: Graph, parent: jnp.ndarray, *,
                              has_child & (mn != mx))
 
     # One BCC per aux component that contains a tree edge; every block's
-    # representative is one of its (non-root) members.
+    # representative is one of its (non-root) members. (Pure-min hooking
+    # makes labels content-determined — the minimum member id — which is
+    # what lets the incremental path reuse cached clean-component labels
+    # bit-identically, DESIGN.md §10.)
     n_bcc = jnp.sum((nonroot & (rep == verts)).astype(jnp.int32))
 
     return dict(articulation=articulation, bridge=bridge,
-                edge_bcc=edge_bcc, n_bcc=n_bcc, pre=pre, size=size,
-                low=low, high=high, aux_rounds=aux_rounds)
+                edge_bcc=edge_bcc, rep=rep, n_bcc=n_bcc,
+                low=low, high=high, aux_rounds=aux_rounds,
+                seg_syncs=seg_syncs)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def bcc_from_parent(graph: Graph, parent: jnp.ndarray, *,
+                    use_kernel: bool = False):
+    """Tarjan–Vishkin biconnectivity from an already-built parent array.
+
+    Computes the tour numbering, then delegates to the shared
+    ``bcc_from_tour`` core. The decomposition covers exactly the
+    subgraph the forest spans: vertices the parent array leaves
+    unspanned (BFS's unreachable −1) contribute no aux vertices, their
+    incident edges carry label −1 and are never bridges, and they are
+    never articulation points. Forest flavors (gconn_euler, pr_rst)
+    span every component, so they decompose the whole graph; BFS
+    decomposes the root's component only.
+
+    Args:
+      graph: Graph (paired half-edges; padding rows ``src == dst == n``).
+      parent: int32[n] rooted spanning forest of ``graph`` (roots
+        self-point; negative entries mark unspanned vertices).
+      use_kernel: route engine phases through their Pallas kernels.
+
+    Returns:
+      dict with the BCCResult fields except ``rst_steps``/``method``.
+    """
+    tn = tour_numbering(parent, use_kernel=use_kernel)
+    out = bcc_from_tour(graph, parent, tn, use_kernel=use_kernel)
+    out.pop("rep")
+    return dict(pre=tn.pre, size=tn.size, **out)
 
 
 def biconnectivity(graph: Graph, root=0, *, rst_flavor: str = "gconn_euler",

@@ -27,6 +27,12 @@ This engine is the single home for those loops (DESIGN.md §3):
                             on the shift successor i ↦ i + 2^k) — the
                             subtree low/high primitive for biconnectivity
                             (DESIGN.md §4);
+  * ``segment_reduce_scoped(a, lo, hi, active, op)`` — the activity-masked
+                            variant (the BCC analogue of
+                            ``compress_scoped``): the table build stops as
+                            soon as every *active* query is covered, so
+                            clean components pay zero doubling steps
+                            (DESIGN.md §10);
   * ``wyllie_rank(s, v)`` — list ranking (−1-sentinel successor convention)
                             with the same amortization.
 
@@ -303,6 +309,11 @@ def segment_reduce(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
             rows.append(t)
         table = jnp.stack(rows)                  # [levels+1, n]
 
+    return _fold_queries(table, lo, hi, levels, combine)
+
+
+def _fold_queries(table, lo, hi, levels, combine):
+    """Fold the two power-of-two segments covering each [lo, hi] query."""
     length = hi - lo + 1
     # k = floor(log2(length)), int-exact (no float log at segment bounds).
     k = jnp.zeros_like(length)
@@ -310,6 +321,71 @@ def segment_reduce(values: jnp.ndarray, lo: jnp.ndarray, hi: jnp.ndarray,
         k = k + (length >= (1 << j)).astype(length.dtype)
     span = jnp.left_shift(jnp.int32(1), k)       # 2^k <= length < 2^(k+1)
     return combine(table[k, lo], table[k, jnp.maximum(hi - span + 1, lo)])
+
+
+@partial(jax.jit, static_argnames=("op", "return_syncs"))
+def segment_reduce_scoped(values: jnp.ndarray, lo: jnp.ndarray,
+                          hi: jnp.ndarray, active: jnp.ndarray,
+                          op: str = "min", *, return_syncs: bool = False):
+    """Activity-masked ``segment_reduce``: only *active* queries matter.
+
+    The BCC analogue of ``compress_scoped`` (DESIGN.md §10): where
+    ``segment_reduce`` builds the full ⌈log2 n⌉-level doubling sparse
+    table unconditionally (depth-oblivious, zero convergence syncs),
+    this variant builds levels in a ``while_loop`` that stops as soon as
+    ``2^k`` covers the longest *active* query — so when a batch dirties
+    only small components, the table build costs
+    ⌈log2(max active length)⌉ doubling steps instead of ⌈log2 n⌉
+    regardless of how large the clean remainder is. The per-level shift
+    is a clamped gather (the dynamic shift amount rules out the static
+    slice trick, but there is exactly one gather in the loop body, so
+    the chained-gather XLA compile blowup the static path dodges cannot
+    occur here). No kernel path: the Pallas ``segment_table`` build has
+    a static grid, which is incompatible with the dynamic level count —
+    the scoped variant exists precisely to make that count dynamic.
+
+    Args:
+      values: [n] array, any dtype ``op`` supports.
+      lo, hi: int32[q] inclusive query bounds, ``0 <= lo <= hi < n``.
+      active: bool[q] — queries that must be answered exactly. Inactive
+        queries return a *defined but arbitrary* value (a partial fold
+        over however many levels were built); callers merge them with a
+        cached answer (`jnp.where(active, out, cached)`).
+      op: "min" | "max" (idempotent ops only).
+      return_syncs: also return the number of doubling levels built
+        (int32) — the device-independent cost the dynamic-BCC
+        benchmarks track (DESIGN.md §10).
+
+    Returns:
+      [q] per-query reductions (exact where ``active``), plus the level
+      count if ``return_syncs``.
+    """
+    if op not in ("min", "max"):
+        raise ValueError(f"segment_reduce needs an idempotent op, got {op!r}")
+    combine = _COMBINE[op]
+    n = values.shape[0]
+    levels = max(1, (n - 1).bit_length())
+    idx = jnp.arange(n, dtype=jnp.int32)
+    max_len = jnp.max(jnp.where(active, hi - lo + 1, 1)).astype(jnp.int32)
+
+    # Unbuilt rows are initialized to row 0 (= values) so inactive
+    # queries index defined data; built rows overwrite in place.
+    table0 = jnp.broadcast_to(values, (levels + 1, n))
+
+    def body(state):
+        table, t, k = state
+        s = jnp.left_shift(jnp.int32(1), k)
+        t = combine(t, t[jnp.minimum(idx + s, n - 1)])
+        return table.at[k + 1].set(t), t, k + 1
+
+    def cond(state):
+        _table, _t, k = state
+        return (jnp.left_shift(jnp.int32(1), k) < max_len) & (k < levels)
+
+    table, _, built = jax.lax.while_loop(cond, body,
+                                         (table0, values, jnp.int32(0)))
+    out = _fold_queries(table, lo, hi, levels, combine)
+    return (out, built) if return_syncs else out
 
 
 @partial(jax.jit, static_argnames=("n_jumps", "use_kernel", "interpret",

@@ -1,9 +1,11 @@
-"""Batch-dynamic rooted-spanning-forest maintenance (DESIGN.md §9).
+"""Batch-dynamic rooted-spanning-forest maintenance (DESIGN.md §9–§10).
 
 State + update application (``forest``), incremental tour refresh
-(``tour``). Edge-stream workloads live in ``repro.data.streams``; the
-serving loop in ``repro.launch.serve_stream``.
+(``tour``), incremental biconnectivity (``bcc``). Edge-stream workloads
+live in ``repro.data.streams``; the serving loop in
+``repro.launch.serve_stream``.
 """
+from repro.dynamic.bcc import DynamicBCC, refresh_bcc
 from repro.dynamic.forest import (DynamicForest, apply_batch, edge_slots,
                                   forest_empty, forest_from_graph,
                                   live_graph)
@@ -11,7 +13,7 @@ from repro.dynamic.replay import init_state, replay_batch, stream_capacity
 from repro.dynamic.tour import refresh_tour
 
 __all__ = [
-    "DynamicForest", "apply_batch", "edge_slots", "forest_empty",
-    "forest_from_graph", "init_state", "live_graph", "replay_batch",
-    "refresh_tour", "stream_capacity",
+    "DynamicBCC", "DynamicForest", "apply_batch", "edge_slots",
+    "forest_empty", "forest_from_graph", "init_state", "live_graph",
+    "replay_batch", "refresh_bcc", "refresh_tour", "stream_capacity",
 ]

@@ -1,0 +1,238 @@
+"""Incremental biconnectivity on the batch-dynamic forest (DESIGN.md §10).
+
+The static layer (``core/bcc.py``) decomposes a frozen graph; this module
+maintains per-half-edge BCC labels, bridges, and articulation points of
+the ``DynamicForest``'s live edge pool *across* ``apply_batch`` calls,
+scoped to dirty components the same way ``dynamic.tour.refresh_tour``
+scopes the tour re-ranking. Dong et al. (*Provably Fast and
+Space-Efficient Parallel Biconnectivity*) reduce BCC to a skeleton over
+the spanning tree; Hong et al. show incremental variants of exactly
+these connectivity primitives win on GPUs — so labels are maintained
+under batches, not recomputed.
+
+Why caching is sound (the §10 contract):
+
+  * **Dirty detection is snapshot-diff, not flag-plumbing.** A
+    ``DynamicBCC`` carries the parent array and pool arrays it was
+    computed against. At refresh time, a vertex is *changed* if its
+    parent link differs or it is an endpoint (old or new) of any pool
+    slot whose (src, dst, valid, tree) content differs; a component is
+    BCC-dirty iff it contains a changed vertex (closure over the new
+    ``state.rep``). This catches what the tour's ``dirty`` mask
+    deliberately ignores — non-tree pool edits change the decomposition
+    without changing the tree — and is robust to any refresh cadence.
+  * **Clean components are bit-stable.** GConn labels the aux graph
+    with pure-min hooking, so a block's label is its minimum member id
+    — content-determined, not history-determined. A clean component has
+    the identical vertex set, edge multiset, and tree, hence the
+    identical aux subgraph and identical labels/bridges/articulation.
+  * **low/high shift by a per-component δ.** Clean components keep
+    their relative preorder but their dense block may slide when other
+    components change size or representative; low/high are preorder
+    values *within* the component, so the cached values are re-based by
+    ``δ[v] = pre_new[v] − pre_cached[v]`` (constant per clean comp).
+
+The scoped recompute itself is one ``core.bcc.bcc_from_tour`` call with
+``scope=dirty``: clean components' edges are masked to padding, the
+low/high sparse tables build only to the longest dirty component
+(``compress.segment_reduce_scoped``), and the aux GConn pass hooks
+nothing clean — so clean components pay zero doubling syncs.
+
+``refresh_bcc(state, cached, incremental=...)`` is bit-identical to a
+full recompute (regression-tested in tests/test_dynamic_bcc.py);
+``incremental=False`` is the ablation baseline
+``benchmarks/table5_dynamic_bcc.py`` measures against.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.bcc import bcc_from_tour
+from repro.core.euler import TourNumbering, tour_numbering
+from repro.dynamic.forest import DynamicForest, live_graph
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class DynamicBCC:
+    """Biconnectivity of the live pool + the snapshots that validate it.
+
+    Attributes (C = pool capacity; half-edge arrays follow the pool's
+    ``Graph`` view: slot e < C is pool direction src→dst, e + C its
+    reverse):
+      n_nodes:      static vertex count n.
+      parent:       int32[n] — parent snapshot the decomposition is for.
+      pool_src, pool_dst: int32[C] pool snapshot (sentinel-padded).
+      pool_valid:   bool[C] occupancy snapshot.
+      tree_mask:    bool[C] tree-slot snapshot.
+      pre:          int32[n] tour preorder the low/high values live in.
+      rep:          int32[n] aux-component label per vertex — the BCC
+                    label of the tree edge above v (min member id;
+                    garbage at roots).
+      low, high:    int32[n] subtree preorder extremes (DESIGN.md §4).
+      articulation: bool[n] cut vertices.
+      bridge:       bool[2C] per half-edge (both directions marked).
+      edge_bcc:     int32[2C] BCC label per half-edge (−1 on padding).
+      n_bcc:        int32 — number of biconnected components.
+      aux_rounds:   int32 — GConn rounds of the last refresh.
+      seg_syncs:    int32 — low/high doubling levels of the last refresh.
+      dirty_count:  int32 — vertices recomputed by the last refresh
+                    (== n for a full recompute).
+    """
+
+    n_nodes: int
+    parent: jnp.ndarray
+    pool_src: jnp.ndarray
+    pool_dst: jnp.ndarray
+    pool_valid: jnp.ndarray
+    tree_mask: jnp.ndarray
+    pre: jnp.ndarray
+    rep: jnp.ndarray
+    low: jnp.ndarray
+    high: jnp.ndarray
+    articulation: jnp.ndarray
+    bridge: jnp.ndarray
+    edge_bcc: jnp.ndarray
+    n_bcc: jnp.ndarray
+    aux_rounds: jnp.ndarray
+    seg_syncs: jnp.ndarray
+    dirty_count: jnp.ndarray
+
+    def tree_flatten(self):
+        return ((self.parent, self.pool_src, self.pool_dst,
+                 self.pool_valid, self.tree_mask, self.pre, self.rep,
+                 self.low, self.high, self.articulation, self.bridge,
+                 self.edge_bcc, self.n_bcc, self.aux_rounds,
+                 self.seg_syncs, self.dirty_count), self.n_nodes)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux, *children)
+
+    @property
+    def n_bridges(self) -> jnp.ndarray:
+        """Undirected bridge count (each bridge marks both halves)."""
+        return jnp.sum(self.bridge.astype(jnp.int32)) // 2
+
+    @property
+    def n_articulation(self) -> jnp.ndarray:
+        return jnp.sum(self.articulation.astype(jnp.int32))
+
+
+def _snapshot(state: DynamicForest, tn: TourNumbering, out, dirty_count):
+    return DynamicBCC(
+        n_nodes=state.n_nodes, parent=state.parent,
+        pool_src=state.pool_src, pool_dst=state.pool_dst,
+        pool_valid=state.pool_valid, tree_mask=state.tree_mask,
+        pre=tn.pre, rep=out["rep"], low=out["low"], high=out["high"],
+        articulation=out["articulation"], bridge=out["bridge"],
+        edge_bcc=out["edge_bcc"], n_bcc=out["n_bcc"],
+        aux_rounds=out["aux_rounds"], seg_syncs=out["seg_syncs"],
+        dirty_count=dirty_count)
+
+
+def _pool_tree_mask(state: DynamicForest) -> jnp.ndarray:
+    """Per-half-edge tree classification of the pool's Graph view."""
+    return jnp.concatenate([state.tree_mask, state.tree_mask])
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def _refresh_full(state: DynamicForest, tn: TourNumbering, *,
+                  use_kernel: bool = False) -> DynamicBCC:
+    out = bcc_from_tour(live_graph(state), state.parent, tn,
+                        tree_mask=_pool_tree_mask(state),
+                        use_kernel=use_kernel)
+    return _snapshot(state, tn, out, jnp.int32(state.n_nodes))
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def _refresh_incremental(state: DynamicForest, tn: TourNumbering,
+                         cached: DynamicBCC, *,
+                         use_kernel: bool = False) -> DynamicBCC:
+    n = state.n_nodes
+    verts = jnp.arange(n, dtype=jnp.int32)
+
+    # ---- dirty detection: diff against the cached snapshots ---------------
+    changed = state.parent != cached.parent
+    slot_changed = ((state.pool_src != cached.pool_src)
+                    | (state.pool_dst != cached.pool_dst)
+                    | (state.pool_valid != cached.pool_valid)
+                    | (state.tree_mask != cached.tree_mask))
+    for ends in (cached.pool_src, cached.pool_dst,
+                 state.pool_src, state.pool_dst):
+        changed = changed.at[jnp.where(slot_changed, ends, n)].set(
+            True, mode="drop")
+    # Closure over the *new* components: merges/splits both leave a
+    # changed vertex in every affected new component.
+    comp_changed = jnp.zeros((n,), jnp.bool_).at[
+        jnp.where(changed, state.rep, n)].set(True, mode="drop")
+    dirty = comp_changed[state.rep]
+    dirty_count = jnp.sum(dirty.astype(jnp.int32))
+
+    # ---- scoped recompute + merge with the cache --------------------------
+    out = bcc_from_tour(live_graph(state), state.parent, tn,
+                        tree_mask=_pool_tree_mask(state), scope=dirty,
+                        use_kernel=use_kernel)
+
+    # Per-vertex merges. Clean low/high re-base by the per-component
+    # block shift δ = pre_new − pre_cached.
+    delta = tn.pre - cached.pre
+    rep = jnp.where(dirty, out["rep"], cached.rep)
+    low = jnp.where(dirty, out["low"], cached.low + delta)
+    high = jnp.where(dirty, out["high"], cached.high + delta)
+    articulation = jnp.where(dirty, out["articulation"],
+                             cached.articulation)
+
+    # Per-half-edge merges: a slot that is live and clean keeps its
+    # cached values (its content is untouched by construction); dirty
+    # and padding slots take the scoped result (which already emits the
+    # −1/False padding values a full recompute would).
+    src2 = jnp.concatenate([state.pool_src, state.pool_dst])
+    valid2 = jnp.concatenate([state.pool_valid, state.pool_valid])
+    clean_slot = valid2 & ~dirty[jnp.clip(src2, 0, n - 1)]
+    edge_bcc = jnp.where(clean_slot, cached.edge_bcc, out["edge_bcc"])
+    bridge = jnp.where(clean_slot, cached.bridge, out["bridge"])
+
+    # Global count from the merged labels (the scoped run's own count
+    # would treat every clean vertex as a singleton block).
+    nonroot = tn.parent != verts
+    n_bcc = jnp.sum((nonroot & (rep == verts)).astype(jnp.int32))
+
+    out = dict(rep=rep, low=low, high=high, articulation=articulation,
+               bridge=bridge, edge_bcc=edge_bcc, n_bcc=n_bcc,
+               aux_rounds=out["aux_rounds"], seg_syncs=out["seg_syncs"])
+    return _snapshot(state, tn, out, dirty_count)
+
+
+def refresh_bcc(state: DynamicForest, cached: DynamicBCC | None = None, *,
+                tour: TourNumbering | None = None, incremental: bool = True,
+                use_kernel: bool = False) -> DynamicBCC:
+    """Refresh the pool's biconnectivity after ``apply_batch`` calls.
+
+    Args:
+      state: the dynamic forest (spanning invariant restored — i.e. not
+        mid-``max_rounds``-truncation).
+      cached: the ``DynamicBCC`` from the previous refresh. ``None``
+        forces a full recompute (the first call).
+      tour: the current ``TourNumbering`` of ``state.parent`` — pass the
+        one ``refresh_tour`` maintains; ``None`` computes a fresh full
+        numbering here.
+      incremental: ablation flag — ``False`` always recomputes from
+        scratch (the ``table5_dynamic_bcc`` baseline). The result is
+        bit-identical either way.
+      use_kernel: route engine phases through their Pallas kernels.
+
+    Returns:
+      DynamicBCC — pass it back as ``cached`` next time. Unlike
+      ``refresh_tour`` this does not touch ``state.dirty`` (the tour
+      refresh owns that mask); dirty tracking here is snapshot-diff.
+    """
+    tn = tour if tour is not None else tour_numbering(
+        state.parent, use_kernel=use_kernel)
+    if cached is None or not incremental:
+        return _refresh_full(state, tn, use_kernel=use_kernel)
+    return _refresh_incremental(state, tn, cached, use_kernel=use_kernel)

@@ -119,17 +119,22 @@ def forest_empty(n_nodes: int, capacity: int) -> DynamicForest:
 
 
 def forest_from_graph(graph: Graph, capacity: int | None = None,
-                      root: int = 0, *,
+                      root: int = 0, *, batch_hint: int = 16,
                       use_kernel: bool = False) -> DynamicForest:
     """Seed the dynamic state from a static graph (GConn + Euler build).
 
-    The pool holds the graph's M undirected edges in its first M slots;
-    ``capacity`` (default M) must be ≥ M. The forest is the GConn spanning
-    forest rooted at ``root`` (its component) / component reps (others).
+    The pool holds the graph's M undirected edges in its first M slots.
+    ``capacity`` must be ≥ M; the default leaves insertion headroom —
+    ``max(M + 4 * batch_hint, ceil(1.25 * M))`` — so a freshly seeded
+    forest absorbs insert-only batches instead of overflowing on the
+    first one (pass ``capacity=M`` explicitly for a zero-headroom pool).
+    The forest is the GConn spanning forest rooted at ``root`` (its
+    component) / component reps (others).
     """
     n = graph.n_nodes
     m = graph.n_edges
-    capacity = m if capacity is None else capacity
+    if capacity is None:
+        capacity = max(m + 4 * batch_hint, -(-5 * m // 4))
     if capacity < m:
         raise ValueError(f"capacity {capacity} < graph edges {m}")
 

@@ -8,9 +8,17 @@ decode): admit one ``StreamBatch`` per step, apply it to the
 ``DynamicForest`` (deletion slot resolution + cut + link, one jitted
 call each), refresh the Euler-tour numbering at ``--tour-every`` cadence
 (incremental by default; ``--tour full`` is the from-scratch ablation,
-``--tour off`` skips it), and report sustained updates/sec plus batch
-latency percentiles. ``--validate`` cross-checks the final forest
-against a from-scratch build (``core.validate`` oracles).
+``--tour off`` skips it), optionally maintain the pool's biconnectivity
+at the same cadence (``--bcc incremental|full``, DESIGN.md §10), and
+report sustained updates/sec plus batch latency percentiles.
+
+The sustained rate counts *applied* updates only: insertions dropped by
+pool overflow and deletions that matched no live edge are excluded (and
+reported on a separate dropped-events line when nonzero) — the rate
+reflects work done, not traffic offered. ``--validate`` cross-checks the
+final forest against a from-scratch build (``core.validate`` oracles)
+with a vectorized canonical-relabel partition comparison over *all*
+vertices.
 """
 from __future__ import annotations
 
@@ -20,9 +28,26 @@ import time
 import numpy as np
 
 
+def canonical_partition(rep: np.ndarray) -> np.ndarray:
+    """Relabel a representative array to first-occurrence order.
+
+    Two rep arrays describe the same partition iff their canonical forms
+    are elementwise equal — an O(n log n) ``np.unique`` cross-check over
+    every vertex (replacing the old quadratic strided double loop, which
+    sampled pairs and still dominated ``--validate`` wall-clock).
+    """
+    _, first, inverse = np.unique(rep, return_index=True,
+                                  return_inverse=True)
+    # np.unique codes are sorted by value; remap them so code k is the
+    # k-th distinct representative *encountered*, making labels
+    # assignment-order-free.
+    order = np.argsort(np.argsort(first))
+    return order[inverse]
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(
-        description="batch-dynamic RST serving loop (DESIGN.md §9)")
+        description="batch-dynamic RST serving loop (DESIGN.md §9–§10)")
     ap.add_argument("--graph", default="grid_64",
                     help="data.graphs.SUITE name")
     ap.add_argument("--stream", default="churn",
@@ -37,6 +62,10 @@ def main() -> None:
                     help="tour refresh mode (full = ablation baseline)")
     ap.add_argument("--tour-every", type=int, default=4,
                     help="refresh the tour numbering every k batches")
+    ap.add_argument("--bcc", default="off",
+                    choices=("incremental", "full", "off"),
+                    help="maintain pool biconnectivity at the tour "
+                         "cadence (DESIGN.md §10)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--validate", action="store_true",
                     help="oracle-check the final forest")
@@ -46,10 +75,12 @@ def main() -> None:
 
     from repro.data.graphs import SUITE
     from repro.data.streams import STREAMS
-    from repro.dynamic import init_state, refresh_tour, replay_batch
+    from repro.dynamic import (init_state, refresh_bcc, refresh_tour,
+                               replay_batch)
 
     factory, kwargs, regime = SUITE[args.graph]
     g = factory(**kwargs)
+    n = g.n_nodes
     stream_kwargs = {"batch": args.batch, "seed": args.seed}
     if args.stream == "sliding_window":
         stream_kwargs["window"] = args.window
@@ -58,9 +89,9 @@ def main() -> None:
     stream = STREAMS[args.stream](g, **stream_kwargs)
     batches = stream.batches[:args.steps]
 
-    print(f"graph {args.graph} ({regime}): V={g.n_nodes} E={g.n_edges}; "
+    print(f"graph {args.graph} ({regime}): V={n} E={g.n_edges}; "
           f"stream {args.stream}, batch={args.batch}, "
-          f"{len(batches)} batches, tour={args.tour}")
+          f"{len(batches)} batches, tour={args.tour}, bcc={args.bcc}")
 
     state = init_state(stream)
     # Warm the jits on the first batch shapes (not timed).
@@ -69,37 +100,68 @@ def main() -> None:
         jax.block_until_ready(warm.parent)
 
     tn = None
-    events = 0
-    lat, tour_lat = [], []
+    bcc = None
+    applied = 0
+    dropped_overflow = 0
+    dropped_unmatched = 0
+    lat, tour_lat, bcc_lat = [], [], []
     t_loop = time.perf_counter()
     for step, b in enumerate(batches):
         t0 = time.perf_counter()
         state, stats = replay_batch(state, b)
         jax.block_until_ready(state.parent)
         lat.append(time.perf_counter() - t0)
-        events += int((b.ins_u < g.n_nodes).sum())
-        events += int((b.del_u < g.n_nodes).sum())
+        # Applied updates only: offered insertions minus pool overflow,
+        # plus deletions that actually matched a live pool slot.
+        ins_offered = int((b.ins_u < n).sum())
+        del_offered = int((b.del_u < n).sum())
+        overflow = int(stats["overflow"])
+        del_found = int(stats["deletes_found"])
+        applied += (ins_offered - overflow) + del_found
+        dropped_overflow += overflow
+        dropped_unmatched += del_offered - del_found
         if args.tour != "off" and (step + 1) % args.tour_every == 0:
             t0 = time.perf_counter()
             tn, state = refresh_tour(
                 state, tn, incremental=(args.tour == "incremental"))
             jax.block_until_ready(tn.pre)
             tour_lat.append(time.perf_counter() - t0)
+        if args.bcc != "off" and (step + 1) % args.tour_every == 0:
+            t0 = time.perf_counter()
+            bcc = refresh_bcc(state, bcc, tour=tn,
+                              incremental=(args.bcc == "incremental"))
+            jax.block_until_ready(bcc.edge_bcc)
+            bcc_lat.append(time.perf_counter() - t0)
         if step < 3 or (step + 1) % 8 == 0:
-            print(f"  batch {step:3d}: {lat[-1]*1e3:6.1f} ms  "
-                  f"cuts={int(stats['cuts'])} links={int(stats['links'])} "
-                  f"rounds={int(stats['rounds'])} "
-                  f"components={int(state.n_components)}")
+            line = (f"  batch {step:3d}: {lat[-1]*1e3:6.1f} ms  "
+                    f"cuts={int(stats['cuts'])} links={int(stats['links'])} "
+                    f"rounds={int(stats['rounds'])} "
+                    f"components={int(state.n_components)}")
+            if bcc is not None:
+                line += (f" n_bcc={int(bcc.n_bcc)} "
+                         f"bridges={int(bcc.n_bridges)}")
+            print(line)
     elapsed = time.perf_counter() - t_loop
 
     lat_ms = np.asarray(lat) * 1e3
-    print(f"\nsustained: {events / max(elapsed, 1e-9):,.0f} updates/sec "
-          f"({events} events / {elapsed:.2f} s)")
+    print(f"\nsustained: {applied / max(elapsed, 1e-9):,.0f} updates/sec "
+          f"({applied} applied events / {elapsed:.2f} s)")
+    dropped = dropped_overflow + dropped_unmatched
+    if dropped:
+        print(f"dropped: {dropped} events excluded from the rate "
+              f"(pool overflow={dropped_overflow}, "
+              f"unmatched deletes={dropped_unmatched})")
     print(f"batch latency: p50 {np.percentile(lat_ms, 50):.1f} ms, "
           f"p95 {np.percentile(lat_ms, 95):.1f} ms")
     if tour_lat:
         print(f"tour refresh ({args.tour}): median "
               f"{np.median(tour_lat)*1e3:.1f} ms over {len(tour_lat)} calls")
+    if bcc_lat:
+        print(f"bcc refresh ({args.bcc}): median "
+              f"{np.median(bcc_lat)*1e3:.1f} ms over {len(bcc_lat)} calls; "
+              f"final n_bcc={int(bcc.n_bcc)} "
+              f"bridges={int(bcc.n_bridges)} "
+              f"articulation={int(bcc.n_articulation)}")
 
     if args.validate:
         from repro.core.compress import roots_of
@@ -113,10 +175,10 @@ def main() -> None:
         scratch = rooted_spanning_tree(lg, root, method="gconn_euler")
         rep_d = np.asarray(state.rep)
         rep_s = np.asarray(roots_of(scratch.parent))
-        same = all((rep_d[i] == rep_d[j]) == (rep_s[i] == rep_s[j])
-                   for i in range(0, g.n_nodes, 97)
-                   for j in range(0, g.n_nodes, 89))
-        print(f"validate: forest {v}, partition==from-scratch: {same}")
+        same = bool(np.array_equal(canonical_partition(rep_d),
+                                   canonical_partition(rep_s)))
+        print(f"validate: forest {v}, partition==from-scratch: {same} "
+              f"(all {n} vertices)")
 
 
 if __name__ == "__main__":

@@ -10,7 +10,7 @@ from numpy.testing import assert_array_equal
 from repro.core.compress import (DEFAULT_JUMPS, compress_full,
                                  compress_scoped, jump_k, rank_to_root,
                                  reduce_to_root, roots_of, segment_reduce,
-                                 wyllie_rank)
+                                 segment_reduce_scoped, wyllie_rank)
 
 rng = np.random.default_rng(7)
 
@@ -262,6 +262,49 @@ def test_segment_reduce_rejects_non_idempotent_op():
     v = jnp.zeros((4,), jnp.int32)
     with pytest.raises(ValueError, match="idempotent"):
         segment_reduce(v, v[:1], v[:1], "add")
+    with pytest.raises(ValueError, match="idempotent"):
+        segment_reduce_scoped(v, v[:1], v[:1], jnp.ones((1,), bool), "add")
+
+
+@pytest.mark.parametrize("op", ["min", "max"])
+@pytest.mark.parametrize("n", [1, 2, 64, 257])
+def test_segment_reduce_scoped_matches_full_on_active(op, n):
+    """The activity-masked build answers every active query exactly as
+    the full static table does (DESIGN.md §10)."""
+    values = rng.integers(-1000, 1000, n).astype(np.int32)
+    lo = rng.integers(0, n, 4 * n).astype(np.int32)
+    hi = np.asarray([rng.integers(l, n) for l in lo], np.int32)
+    active = rng.random(4 * n) < 0.5
+    full = segment_reduce(jnp.asarray(values), jnp.asarray(lo),
+                          jnp.asarray(hi), op)
+    scoped = segment_reduce_scoped(jnp.asarray(values), jnp.asarray(lo),
+                                   jnp.asarray(hi), jnp.asarray(active),
+                                   op)
+    assert_array_equal(np.asarray(scoped)[active], np.asarray(full)[active])
+
+
+def test_segment_reduce_scoped_level_count_tracks_active_span():
+    """Doubling levels built = ⌈log2(max active length)⌉, independent of
+    n and of how long the *inactive* queries are."""
+    n = 1024
+    values = jnp.asarray(rng.integers(-50, 50, n), jnp.int32)
+    lo = jnp.asarray([0, 10, 0], jnp.int32)
+    hi = jnp.asarray([n - 1, 16, n - 1], jnp.int32)   # one huge inactive
+    active = jnp.asarray([False, True, False])
+    out, built = segment_reduce_scoped(values, lo, hi, active, "min",
+                                       return_syncs=True)
+    assert int(built) == 3                       # 2^3 >= length 7
+    assert int(out[1]) == int(np.min(np.asarray(values)[10:17]))
+    # All-inactive: zero levels built.
+    _, built0 = segment_reduce_scoped(values, lo, hi,
+                                      jnp.zeros((3,), bool), "min",
+                                      return_syncs=True)
+    assert int(built0) == 0
+    # A full-span active query degrades to the static cost.
+    _, built_full = segment_reduce_scoped(values, lo, hi,
+                                          jnp.asarray([True] * 3), "min",
+                                          return_syncs=True)
+    assert int(built_full) == 10                 # ceil(log2(1024))
 
 
 @pytest.mark.parametrize("seed", [0, 1, 2])

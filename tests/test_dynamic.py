@@ -198,6 +198,27 @@ def test_delete_nonexistent_is_noop():
     assert_array_equal(np.asarray(st2.parent), np.asarray(st.parent))
 
 
+def test_default_capacity_has_insert_headroom():
+    """Regression: a default-capacity forest absorbs a full insert-only
+    batch without overflow (the old default of exactly M overflowed on
+    the first insertion)."""
+    g = G.grid2d(6)
+    st = forest_from_graph(g)                    # default capacity
+    assert st.capacity >= g.n_edges + 64         # 4 * batch_hint floor
+    stream = STREAMS["insert_heavy"](g, batch=16, seed=0, n_batches=1)
+    b = stream.batches[0]
+    no_del = jnp.zeros((st.capacity,), jnp.bool_)
+    st, stats = apply_batch(st, jnp.asarray(b.ins_u),
+                            jnp.asarray(b.ins_v), no_del)
+    assert int(stats["overflow"]) == 0
+    # Explicit zero-headroom capacity still overflows — the knob works.
+    tight = forest_from_graph(g, capacity=g.n_edges)
+    no_del = jnp.zeros((tight.capacity,), jnp.bool_)
+    _, stats = apply_batch(tight, jnp.asarray(b.ins_u),
+                           jnp.asarray(b.ins_v), no_del)
+    assert int(stats["overflow"]) == int((b.ins_u < g.n_nodes).sum())
+
+
 def test_pool_overflow_is_counted():
     st = forest_empty(4, capacity=2)
     iu = jnp.asarray([0, 1, 2], jnp.int32)

@@ -1,0 +1,201 @@
+"""Incremental biconnectivity on the dynamic forest (DESIGN.md §10):
+networkx-oracle replay across all stream generators, incremental-vs-full
+bit-identity, dirty scoping, multigraph tree-mask semantics."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core import biconnectivity
+from repro.core.graph import Graph
+from repro.data import graphs as G
+from repro.data.streams import STREAMS
+from repro.dynamic import (apply_batch, forest_empty, init_state,
+                           live_graph, refresh_bcc, refresh_tour,
+                           replay_batch)
+
+#: every DynamicBCC decomposition field (the bit-identity surface).
+_FIELDS = ("rep", "low", "high", "articulation", "bridge", "edge_bcc",
+           "n_bcc")
+
+
+def _edge(u, v):
+    return frozenset((int(u), int(v)))
+
+
+def _nx_reference(g: Graph):
+    """(articulation set, bridge set, edge partition) via networkx."""
+    nx = pytest.importorskip("networkx")
+    nxg = nx.Graph()
+    nxg.add_nodes_from(range(g.n_nodes))
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    real = (src < g.n_nodes) & (dst < g.n_nodes)
+    nxg.add_edges_from((int(u), int(v)) for u, v, ok in
+                       zip(src, dst, real) if ok and u != v)
+    art = set(nx.articulation_points(nxg))
+    bridges = {_edge(u, v) for u, v in nx.bridges(nxg)}
+    partition = frozenset(
+        frozenset(_edge(u, v) for u, v in comp)
+        for comp in nx.biconnected_component_edges(nxg))
+    return art, bridges, partition
+
+
+def _decompose_dynamic(state, bcc):
+    """DynamicBCC → (art set, bridge set, edge partition) over the pool."""
+    n = state.n_nodes
+    src = np.concatenate([np.asarray(state.pool_src),
+                          np.asarray(state.pool_dst)])
+    dst = np.concatenate([np.asarray(state.pool_dst),
+                          np.asarray(state.pool_src)])
+    real = (src < n) & (dst < n)
+    art = {v for v in range(n) if bool(np.asarray(bcc.articulation)[v])}
+    bridge_mask = np.asarray(bcc.bridge)
+    bridges = {_edge(u, v) for u, v, e, ok in
+               zip(src, dst, bridge_mask, real) if ok and e}
+    labels = np.asarray(bcc.edge_bcc)
+    blocks: dict[int, set] = {}
+    for u, v, lab, ok in zip(src, dst, labels, real):
+        if ok:
+            blocks.setdefault(int(lab), set()).add(_edge(u, v))
+    partition = frozenset(frozenset(b) for b in blocks.values())
+    return art, bridges, partition, int(bcc.n_bcc)
+
+
+def _assert_oracle(state, bcc, tag):
+    """bcc matches networkx AND a from-scratch static biconnectivity."""
+    lg = live_graph(state)
+    art_ref, bridges_ref, partition_ref = _nx_reference(lg)
+    art, bridges, partition, n_bcc = _decompose_dynamic(state, bcc)
+    assert art == art_ref, (tag, art ^ art_ref)
+    assert bridges == bridges_ref, (tag, bridges ^ bridges_ref)
+    assert partition == partition_ref, tag
+    assert n_bcc == len(partition_ref), tag
+
+    # The static path on the same live graph agrees mask-for-mask (the
+    # streams never create parallel edges, so inferred classification
+    # is sound and the slot layouts coincide).
+    res = biconnectivity(lg, int(np.asarray(state.rep)[0]),
+                         rst_flavor="gconn_euler")
+    assert_array_equal(np.asarray(res.articulation),
+                       np.asarray(bcc.articulation), err_msg=str(tag))
+    assert_array_equal(np.asarray(res.bridge),
+                       np.asarray(bcc.bridge), err_msg=str(tag))
+    assert int(res.n_bcc) == n_bcc, tag
+
+
+def _assert_bit_identical(incr, full, tag):
+    for field in _FIELDS:
+        assert_array_equal(np.asarray(getattr(incr, field)),
+                           np.asarray(getattr(full, field)),
+                           err_msg=f"{tag}: {field}")
+
+
+@pytest.mark.parametrize("stream_name", list(STREAMS))
+@pytest.mark.parametrize("graph_name", ["grid", "rmat"])
+def test_incremental_bcc_matches_oracle_and_full(stream_name, graph_name):
+    """Acceptance: replaying any generator, after every refresh the
+    maintained decomposition (a) equals a from-scratch full recompute
+    bit-for-bit and (b) matches networkx on the live graph."""
+    g = G.grid2d(9) if graph_name == "grid" else G.rmat(6, 4, seed=2)
+    stream = STREAMS[stream_name](g, batch=12, seed=3, n_batches=8)
+    state = init_state(stream)
+    tn, state = refresh_tour(state, None)
+    bcc = refresh_bcc(state, None, tour=tn)
+    for step, b in enumerate(stream.batches):
+        state, _ = replay_batch(state, b)
+        tn, state = refresh_tour(state, tn)
+        bcc = refresh_bcc(state, bcc, tour=tn, incremental=True)
+        full = refresh_bcc(state, None, tour=tn, incremental=False)
+        tag = f"{stream_name}/{graph_name}@{step}"
+        _assert_bit_identical(bcc, full, tag)
+        if step % 3 == 2 or step == len(stream.batches) - 1:
+            _assert_oracle(state, bcc, tag)
+
+
+def test_incremental_ablation_flag_is_bit_identical():
+    """``incremental=False`` with a cache behaves exactly like no cache
+    (the table5 ablation contract)."""
+    g = G.grid2d(8)
+    stream = STREAMS["churn"](g, batch=16, seed=1, n_batches=4)
+    state = init_state(stream)
+    tn, state = refresh_tour(state, None)
+    bcc = refresh_bcc(state, None, tour=tn)
+    for b in stream.batches:
+        state, _ = replay_batch(state, b)
+        tn, state = refresh_tour(state, tn)
+        ablated = refresh_bcc(state, bcc, tour=tn, incremental=False)
+        fresh = refresh_bcc(state, None, tour=tn)
+        _assert_bit_identical(ablated, fresh, "ablation")
+        bcc = ablated
+
+
+def test_refresh_scoping_leaves_clean_components_cheap():
+    """A batch touching one component recomputes only it: dirty_count
+    covers that component, and the scoped low/high build is shallower
+    than the full one."""
+    # Two far-apart triangles; churn only the second.
+    edges = ([(0, 1), (1, 2), (2, 0)]
+             + [(40 + i, 40 + (i + 1) % 24) for i in range(24)])
+    n = 64
+    g = Graph.from_numpy_undirected(n, np.asarray(edges))
+    st = forest_empty(n, capacity=40)
+    iu = jnp.asarray([e[0] for e in edges], jnp.int32)
+    iv = jnp.asarray([e[1] for e in edges], jnp.int32)
+    st, _ = apply_batch(st, iu, iv, jnp.zeros((40,), jnp.bool_))
+    tn, st = refresh_tour(st, None)
+    bcc = refresh_bcc(st, None, tour=tn)
+    full_syncs = int(bcc.seg_syncs)
+
+    # Insert a chord into the triangle component only.
+    st, _ = apply_batch(st, jnp.asarray([0], jnp.int32),
+                        jnp.asarray([2], jnp.int32),
+                        jnp.zeros((40,), jnp.bool_))
+    tn, st = refresh_tour(st, tn)
+    bcc2 = refresh_bcc(st, bcc, tour=tn, incremental=True)
+    assert int(bcc2.dirty_count) == 3            # just the triangle
+    assert int(bcc2.seg_syncs) < full_syncs
+    full = refresh_bcc(st, None, tour=tn, incremental=False)
+    _assert_bit_identical(bcc2, full, "scoped")
+
+
+def test_no_op_refresh_is_free_and_stable():
+    """Refreshing with zero changes recomputes nothing and returns the
+    cached decomposition unchanged."""
+    g = G.grid2d(6)
+    stream = STREAMS["churn"](g, batch=8, seed=0, n_batches=2)
+    state = init_state(stream)
+    tn, state = refresh_tour(state, None)
+    bcc = refresh_bcc(state, None, tour=tn)
+    again = refresh_bcc(state, bcc, tour=tn, incremental=True)
+    assert int(again.dirty_count) == 0
+    assert int(again.seg_syncs) == 0
+    _assert_bit_identical(again, bcc, "noop")
+
+
+def test_parallel_tree_copy_is_not_a_bridge():
+    """Multigraph semantics via the explicit pool tree_mask: a parallel
+    copy of a tree edge forms a 2-cycle, so the edge is not a bridge
+    (the static inferred-classification path cannot express this)."""
+    n = 3
+    st = forest_empty(n, capacity=4)
+    # Path 0-1-2 plus a duplicate copy of (0, 1).
+    iu = jnp.asarray([0, 1, 0], jnp.int32)
+    iv = jnp.asarray([1, 2, 1], jnp.int32)
+    st, _ = apply_batch(st, iu, iv, jnp.zeros((4,), jnp.bool_))
+    assert int(st.n_live_edges) == 3
+    assert int(jnp.sum(st.tree_mask.astype(jnp.int32))) == 2
+    bcc = refresh_bcc(st, None)
+    src = np.concatenate([np.asarray(st.pool_src),
+                          np.asarray(st.pool_dst)])
+    dst = np.concatenate([np.asarray(st.pool_dst),
+                          np.asarray(st.pool_src)])
+    bridge = np.asarray(bcc.bridge)
+    for e in range(len(src)):
+        if src[e] >= n:
+            continue
+        pair = _edge(src[e], dst[e])
+        assert bool(bridge[e]) == (pair == _edge(1, 2)), (e, pair)
+    assert int(bcc.n_bcc) == 2                   # {(0,1)×2} and {(1,2)}
+    art = np.asarray(bcc.articulation)
+    assert art[1] and not art[0] and not art[2]
