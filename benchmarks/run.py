@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
                       stream × batch size (DESIGN.md §9)
   table5_dynamic_bcc/* incremental vs recomputed biconnectivity on the
                       dynamic pool, with sync/round counts (DESIGN.md §10)
+  table6_robustness/* self-healing cost: audit syncs, scoped repair vs
+                      full rebuild on injected faults (DESIGN.md §11)
   kernels/*           Pallas kernel micro-benchmarks (incl. compress_* engine
                       rows; interpret mode off-TPU)
   ablation_compress/* amortized vs per-hop convergence checks (engine k=5
@@ -100,16 +102,22 @@ def main(argv=None) -> None:
 
     from benchmarks import (ablation_hooking, fig1_runtime, fig2_depth,
                             table1_steps, table2_stats, table3_bcc,
-                            table4_dynamic, table5_dynamic_bcc)
+                            table4_dynamic, table5_dynamic_bcc,
+                            table6_robustness)
     from benchmarks.common import rows_to_records
+    from repro.data import graphs as G
 
     if args.smoke:
-        from repro.data import graphs as G
         suite = {"smoke_chain_256": G.chain(256),
                  "smoke_rmat_6": G.rmat(6, edge_factor=4, seed=0)}
+        # The scoped-vs-full comparison needs a state deep enough that
+        # the full rebuild is off its sync floor — one mid-size grid
+        # instead of the micro graphs (still < 10 s on CI).
+        t6_suite = {"grid_32": G.grid2d(32)}
         micro_n = 1 << 12
     else:
         suite = None  # modules build the full Table-II suite
+        t6_suite = None
         micro_n = 1 << 16
 
     rows: list[str] = []
@@ -128,6 +136,7 @@ def main(argv=None) -> None:
     emit(table3_bcc.run(suite))
     emit(table4_dynamic.run(suite))
     emit(table5_dynamic_bcc.run(suite))
+    emit(table6_robustness.run(t6_suite))
     emit(ablation_hooking.run(suite))
     emit(kernel_microbench(micro_n))
     emit(compress_microbench(micro_n))

@@ -1,0 +1,140 @@
+"""Table VI (extension): self-healing cost — audit, scoped repair, rebuild.
+
+The robustness layer (DESIGN.md §11) claims two things worth tracking in
+the perf trajectory: (1) the invariant audit is an O(log n)-sync engine
+pass, cheap enough to run on a serving cadence; (2) when faults hit,
+the fragment-preserving scoped repair (``dynamic.recovery.
+repair_forest`` — sever the broken pointers, keep intact subtrees as
+fragments, relink) costs fewer engine syncs than the from-scratch
+rebuild (``rebuild_forest``), because its round count scales with the
+fault count while the rebuild pays GConn + list-ranking over the whole
+pool. XLA-CPU wall-clock is volume-bound, so — as with table4/table5 —
+the sync counts are the device-independent signal;
+``scripts/bench_smoke.sh`` asserts scoped < full on the single-fault
+(f1) rows.
+
+Rows (steady-state churn states: naturally multi-component with deep
+live components — the regime a serving deployment actually audits; on
+trivially shallow states the rebuild sits at its 2-sync floor and
+nothing can beat it):
+
+  table6_robustness/{graph}/audit
+      one ``audit_forest`` on the healthy state (with tour + BCC caches
+      attached); derived: engine convergence checks spent.
+  table6_robustness/{graph}/{injector}/f{K}/scoped
+      K seeded faults injected, then audit + ``repair_forest``; derived:
+      ``sync_total`` = scoped rep recompute + link-loop overlay syncs +
+      link rounds (detection cost reported separately as
+      ``audit_syncs``), plus ``severed`` (pointers cut).
+  table6_robustness/{graph}/{injector}/f{K}/full
+      the same corrupted state through ``rebuild_forest``; derived:
+      ``sync_total`` = GConn rounds + list-ranking syncs.
+
+Each scoped/full pair is cross-checked for agreement: the repaired and
+rebuilt forests must induce the same component partition and pass a
+fresh audit.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.data.graphs import build_suite
+from repro.data.streams import STREAMS
+from repro.dynamic import (audit_forest, init_state, inject, rebuild_forest,
+                           refresh_bcc, refresh_tour, repair_forest,
+                           replay_batch)
+
+#: injectors whose damage stays inside one component per injection — the
+#: regime the f1 scoped-vs-full assertion in bench_smoke.sh targets.
+_INJECTORS = ("parent_bitflip", "rep_corrupt", "tree_mask_desync")
+_FAULT_COUNTS = (1, 4)
+
+
+def _canon(rep: np.ndarray) -> np.ndarray:
+    _, first, inverse = np.unique(rep, return_index=True,
+                                  return_inverse=True)
+    return np.argsort(np.argsort(first))[inverse]
+
+
+def _steady_state(g):
+    batch = 16 if g.n_nodes <= 1024 else 64
+    stream = STREAMS["churn"](g, batch=batch, seed=0)
+    state = init_state(stream)
+    for b in stream.batches[:min(6, len(stream.batches))]:
+        state, _ = replay_batch(state, b)
+    tn, state = refresh_tour(state, None)
+    bcc = refresh_bcc(state, None, tour=tn)
+    return state, tn, bcc
+
+
+def run(suite=None) -> list[str]:
+    rows = []
+    suite = suite or build_suite(["grid_64", "rmat_14"])
+    for name, g in suite.items():
+        state, tn, bcc = _steady_state(g)
+        base = f"table6_robustness/{name}"
+
+        report = jax.block_until_ready(audit_forest(state, tn, bcc))
+        assert bool(report.healthy), f"{name}: steady state unhealthy"
+        t_audit = time_fn(lambda: jax.block_until_ready(
+            audit_forest(state, tn, bcc)))
+        rows.append(csv_row(f"{base}/audit", t_audit * 1e6,
+                            f"syncs={int(report.syncs)};healthy=1"))
+
+        for injector in _INJECTORS:
+            for k in _FAULT_COUNTS:
+                # K *effective* injections: a later fault can cancel an
+                # earlier one (e.g. re-forging a dropped tree bit), so
+                # re-audit after each and bump the seed until damage
+                # sticks (deterministic: the seed sequence is fixed).
+                bad, bad_bcc = state, bcc
+                seed, landed, tries = 1000 * k, 0, 0
+                while landed < k and tries < 16 * k:
+                    nxt, nxt_bcc, _ = inject(injector, bad, bad_bcc,
+                                             seed=seed)
+                    seed += 1
+                    tries += 1
+                    if not bool(audit_forest(nxt).forest_ok):
+                        bad, bad_bcc = nxt, nxt_bcc
+                        landed += 1
+                rep_bad = jax.block_until_ready(audit_forest(bad))
+                assert not bool(rep_bad.forest_ok), (name, injector, k)
+
+                fixed, rstats = jax.block_until_ready(
+                    repair_forest(bad, rep_bad))
+                t_scoped = time_fn(lambda: jax.block_until_ready(
+                    repair_forest(bad, rep_bad)))
+                rebuilt, bstats = jax.block_until_ready(rebuild_forest(bad))
+                t_full = time_fn(lambda: jax.block_until_ready(
+                    rebuild_forest(bad)))
+
+                # Agreement: both restore the pool's component partition
+                # and a fresh audit passes on each.
+                assert bool(audit_forest(fixed).forest_ok), \
+                    (name, injector, k, "scoped repair failed re-audit")
+                assert bool(audit_forest(rebuilt).forest_ok), \
+                    (name, injector, k, "full rebuild failed re-audit")
+                assert np.array_equal(_canon(np.asarray(fixed.rep)),
+                                      _canon(np.asarray(rebuilt.rep))), \
+                    (name, injector, k, "partition mismatch")
+
+                kbase = f"{base}/{injector}/f{k}"
+                rows.append(csv_row(
+                    f"{kbase}/scoped", t_scoped * 1e6,
+                    f"sync_total={int(rstats['sync_total'])};"
+                    f"rounds={int(rstats['rounds'])};"
+                    f"severed={int(rstats['severed'])};"
+                    f"repaired={int(rstats['repaired'])};"
+                    f"audit_syncs={int(rep_bad.syncs)}"))
+                rows.append(csv_row(
+                    f"{kbase}/full", t_full * 1e6,
+                    f"sync_total={int(bstats['sync_total'])};"
+                    f"cc_rounds={int(bstats['cc_rounds'])};"
+                    f"rank_syncs={int(bstats['rank_syncs'])}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -11,7 +11,9 @@ and the Euler-tour numbering refreshes incrementally, only for
 components a batch actually touched (DESIGN.md §9). On top of the tour,
 the biconnectivity decomposition is *maintained* the same way: bridges
 and articulation points update per batch under dirty-component scoping
-instead of being recomputed (DESIGN.md §10).
+instead of being recomputed (DESIGN.md §10). The final act breaks the
+forest on purpose and lets the self-healing ladder repair it
+(DESIGN.md §11).
 """
 import time
 
@@ -78,6 +80,7 @@ def main() -> None:
     print(f"incremental tour == full recompute: {same}")
 
     track_biconnectivity()
+    survive_faults()
 
 
 def track_biconnectivity():
@@ -119,6 +122,35 @@ def track_biconnectivity():
                for f in ("rep", "low", "high", "articulation",
                          "bridge", "edge_bcc", "n_bcc"))
     print(f"incremental bcc == full recompute: {same}")
+
+
+def survive_faults():
+    """Self-healing: inject faults, audit in O(log n), repair in place.
+
+    ``audit_forest`` checks every forest invariant on device with a
+    bounded sync schedule; ``recover`` escalates refresh → scoped
+    fragment-preserving repair → full rebuild, and certifies the result
+    with a final audit (DESIGN.md §11). ``serve_stream --chaos`` runs
+    this ladder continuously inside the serving loop.
+    """
+    from repro.dynamic import audit_forest, inject, recover
+
+    g = grid2d(24)
+    stream = churn(g, batch=48, n_batches=8, seed=3)
+    print("\n=== self-healing: injected faults over grid 24x24 ===")
+    state = init_state(stream)
+    for b in stream.batches:
+        state, _ = replay_batch(state, b)
+    tn, state = refresh_tour(state, None)
+    bcc = refresh_bcc(state, None, tour=tn)
+
+    for fault in ("parent_bitflip", "rep_corrupt", "parent_cycle"):
+        state, bcc, what = inject(fault, state, bcc, seed=11)
+        state, tn, bcc, report, info = recover(state, tn, bcc)
+        print(f"  {fault:15s} ({what}): audit -> {report.summary()}")
+        print(f"  {'':15s}  healed via {info['mode']!r}, "
+              f"final audit: {audit_forest(state, tn, bcc).summary()}")
+        assert bool(audit_forest(state, tn, bcc).healthy)
 
 
 if __name__ == "__main__":

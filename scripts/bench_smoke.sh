@@ -3,12 +3,15 @@
 # microbenches, rows also written to BENCH_rst.json. Asserts the
 # biconnectivity rows (table3/*, DESIGN.md §4), the batch-dynamic rows
 # (table4_dynamic/*, §9), and the incremental-BCC rows
-# (table5_dynamic_bcc/*, §10) actually landed so the downstream layers
+# (table5_dynamic_bcc/*, §10), and the self-healing rows
+# (table6_robustness/*, §11) actually landed so the downstream layers
 # can't silently drop out of the perf trajectory — and asserts the
 # *sync/round counts* of the incremental BCC refresh beat the full
-# recompute on the chain-regime sliding_window rows. Wall-clock on the
-# XLA-CPU CI backend is volume-bound, so the sync counts are the
-# device-independent advantage this guard keeps honest without a GPU.
+# recompute on the chain-regime sliding_window rows, and of the scoped
+# fault repair beat the full rebuild on the single-fault (f1) rows.
+# Wall-clock on the XLA-CPU CI backend is volume-bound, so the sync
+# counts are the device-independent advantage this guard keeps honest
+# without a GPU.
 set -e
 cd "$(dirname "$0")/.."
 PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}" \
@@ -24,6 +27,10 @@ if ! grep -q '"name": "table4_dynamic/' BENCH_rst.json; then
 fi
 if ! grep -q '"name": "table5_dynamic_bcc/' BENCH_rst.json; then
     echo "bench_smoke: no table5_dynamic_bcc/* incremental-BCC row in BENCH_rst.json" >&2
+    exit 1
+fi
+if ! grep -q '"name": "table6_robustness/' BENCH_rst.json; then
+    echo "bench_smoke: no table6_robustness/* self-healing row in BENCH_rst.json" >&2
     exit 1
 fi
 
@@ -57,6 +64,27 @@ for name, rec in records.items():
 if pairs == 0:
     sys.exit("bench_smoke: no chain-regime sliding_window table5 row pairs "
              "found to compare")
+
+# Self-healing (DESIGN.md §11): on single-component faults the scoped
+# repair must cost fewer engine syncs than the from-scratch rebuild.
+t6_pairs = 0
+for name, rec in records.items():
+    if not name.startswith("table6_robustness/"):
+        continue
+    if not name.endswith("/f1/scoped"):
+        continue
+    full = records.get(name[: -len("scoped")] + "full")
+    assert full is not None, f"missing full-rebuild twin for {name}"
+    ss, sf = sync_total(rec), sync_total(full)
+    if ss >= sf:
+        sys.exit(f"bench_smoke: scoped repair sync count regressed: "
+                 f"{name} has sync_total={ss} >= full rebuild {sf}")
+    print(f"bench_smoke: {name}: sync_total {ss} < full rebuild {sf}")
+    t6_pairs += 1
+
+if t6_pairs == 0:
+    sys.exit("bench_smoke: no f1 scoped/full table6 row pairs found "
+             "to compare")
 EOF
 
-echo "bench_smoke: ok (table3 + table4_dynamic + table5_dynamic_bcc rows present, incremental BCC sync counts ahead)"
+echo "bench_smoke: ok (table3 + table4_dynamic + table5_dynamic_bcc + table6_robustness rows present, incremental BCC and scoped-repair sync counts ahead)"

@@ -1,0 +1,38 @@
+#!/usr/bin/env sh
+# Chaos soak for CI: serve a churn stream on grid_64 with every fault
+# injector firing on a cadence, the O(log n) invariant audit + repair
+# ladder running every 4 batches, and the final forest oracle-checked
+# against a from-scratch build (--validate exits nonzero on any
+# post-recovery mismatch — structure, partition, or spanning). A second
+# pass drives the checkpointed crash-recovery path: the run is split at
+# a checkpoint boundary and resumed, and must converge to the same
+# oracle-checked final state (injections replay by (seed, step), so the
+# resumed run sees the identical fault sequence).
+set -e
+cd "$(dirname "$0")/.."
+PY="${PYTHON:-python}"
+export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "chaos_smoke: full-ladder soak (all injectors, audit@4, sanitize)"
+$PY -m repro.launch.serve_stream \
+    --graph grid_64 --stream churn --batch 64 --steps 24 \
+    --tour incremental --tour-every 4 --bcc incremental \
+    --chaos all --chaos-every 4 --audit-every 4 --sanitize \
+    --validate
+
+echo "chaos_smoke: kill + resume under chaos (checkpoint at batch 8)"
+CKPT=$(mktemp -d)
+trap 'rm -rf "$CKPT"' EXIT
+$PY -m repro.launch.serve_stream \
+    --graph grid_64 --stream churn --batch 64 --steps 8 \
+    --tour incremental --tour-every 4 --bcc incremental \
+    --chaos parent_cycle,pool_desync --chaos-every 3 --audit-every 4 \
+    --ckpt-dir "$CKPT" --ckpt-every 4
+$PY -m repro.launch.serve_stream \
+    --graph grid_64 --stream churn --batch 64 --steps 16 \
+    --tour incremental --tour-every 4 --bcc incremental \
+    --chaos parent_cycle,pool_desync --chaos-every 3 --audit-every 4 \
+    --ckpt-dir "$CKPT" --ckpt-every 4 --resume \
+    --validate
+
+echo "chaos_smoke: ok (recovered forests pass the from-scratch oracle)"

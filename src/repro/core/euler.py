@@ -48,13 +48,15 @@ def _lexsort_edges(frm: jnp.ndarray, to: jnp.ndarray) -> jnp.ndarray:
 
 
 def list_rank_dist_to_end(succ: jnp.ndarray, valid: jnp.ndarray,
-                          *, use_kernel: bool = False) -> jnp.ndarray:
+                          *, use_kernel: bool = False,
+                          return_syncs: bool = False) -> jnp.ndarray:
     """Wyllie list ranking: d[e] = number of list elements after e.
 
     Routed through the unified engine (``core.compress.wyllie_rank``):
     amortized convergence checks, optional list_rank Pallas kernel.
     """
-    return wyllie_rank(succ, valid, use_kernel=use_kernel)
+    return wyllie_rank(succ, valid, use_kernel=use_kernel,
+                       return_syncs=return_syncs)
 
 
 def _tour_successors(n: int, fu: jnp.ndarray, fv: jnp.ndarray,
@@ -108,10 +110,11 @@ def _tour_successors(n: int, fu: jnp.ndarray, fv: jnp.ndarray,
     return succ, dvalid
 
 
-@partial(jax.jit, static_argnums=(0,), static_argnames=("use_kernel",))
+@partial(jax.jit, static_argnums=(0,),
+         static_argnames=("use_kernel", "return_syncs"))
 def euler_tour_root(n_nodes: int, fu: jnp.ndarray, fv: jnp.ndarray,
                     valid: jnp.ndarray, comp_root: jnp.ndarray,
-                    *, use_kernel: bool = False):
+                    *, use_kernel: bool = False, return_syncs: bool = False):
     """Root a spanning forest by Euler tour.
 
     Args:
@@ -123,11 +126,15 @@ def euler_tour_root(n_nodes: int, fu: jnp.ndarray, fv: jnp.ndarray,
               (constant within a component; ``comp_root[v] == v`` iff v is
               that component's root).
       use_kernel: route list ranking through the Pallas list_rank kernel.
+      return_syncs: also return the list-ranking convergence-check count
+              (int32) — the dominant engine cost of a from-scratch
+              rooting, tracked by the recovery benchmarks (DESIGN.md §11).
 
     Returns:
       parent: int32[n]; ``parent[root] == root`` per component, every other
               vertex in a non-trivial component points at its tree parent;
-              isolated vertices point at themselves.
+              isolated vertices point at themselves. With ``return_syncs``:
+              ``(parent, syncs)``.
     """
     n = n_nodes
     t = fu.shape[0]
@@ -135,7 +142,9 @@ def euler_tour_root(n_nodes: int, fu: jnp.ndarray, fv: jnp.ndarray,
     succ, dvalid = _tour_successors(n, fu, fv, valid, comp_root)
 
     # Rank; earlier-traversed direction has the larger distance-to-end.
-    d = list_rank_dist_to_end(succ, dvalid, use_kernel=use_kernel)
+    d, rank_syncs = list_rank_dist_to_end(succ, dvalid,
+                                          use_kernel=use_kernel,
+                                          return_syncs=True)
 
     # Discovery edge (x → y) ⇒ parent[y] = x.
     de = d[:t]
@@ -147,6 +156,8 @@ def euler_tour_root(n_nodes: int, fu: jnp.ndarray, fv: jnp.ndarray,
 
     parent = jnp.arange(n, dtype=jnp.int32)
     parent = parent.at[child].set(par, mode="drop")
+    if return_syncs:
+        return parent, rank_syncs
     return parent
 
 

@@ -120,7 +120,8 @@ def reverse_and_graft(p, mark, prednode, starts, grafts, active):
 
 def link_components(p: jnp.ndarray, rt: jnp.ndarray, start: jnp.ndarray,
                     target: jnp.ndarray, cand: jnp.ndarray, *, levels: int,
-                    n_jumps: int = DEFAULT_JUMPS, use_kernel: bool = False):
+                    n_jumps: int = DEFAULT_JUMPS, use_kernel: bool = False,
+                    return_syncs: bool = False):
     """One batched link round: re-root + graft one winning edge per mover.
 
     For every candidate edge e, the component of ``start[e]`` is the
@@ -140,7 +141,10 @@ def link_components(p: jnp.ndarray, rt: jnp.ndarray, start: jnp.ndarray,
     Returns ``(p', rt', is_winner)`` with ``rt' == roots_of(p')``
     re-established incrementally: one engine compression of the
     component-level overlay plus one gather (DESIGN.md §3), never a
-    from-scratch ``roots_of`` over the tree.
+    from-scratch ``roots_of`` over the tree. With ``return_syncs`` the
+    overlay compression's convergence-check count is appended — the
+    device-independent per-round cost the recovery benchmarks track
+    (DESIGN.md §11).
     """
     n = p.shape[0]
     m = start.shape[0]
@@ -172,6 +176,9 @@ def link_components(p: jnp.ndarray, rt: jnp.ndarray, start: jnp.ndarray,
     # an acyclic forest over the (much shallower) component graph.
     graft_root = rt[jnp.clip(comp_graft, 0, n - 1)]
     overlay = jnp.where(comp_active, graft_root, verts)
-    comp_rt = compress_full(overlay, n_jumps=n_jumps, use_kernel=use_kernel)
+    comp_rt, syncs = compress_full(overlay, n_jumps=n_jumps,
+                                   use_kernel=use_kernel, return_syncs=True)
     rt_next = comp_rt[rt]
+    if return_syncs:
+        return p_next, rt_next, is_winner, syncs
     return p_next, rt_next, is_winner

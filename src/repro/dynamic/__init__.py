@@ -1,19 +1,30 @@
 """Batch-dynamic rooted-spanning-forest maintenance (DESIGN.md §9–§10).
 
 State + update application (``forest``), incremental tour refresh
-(``tour``), incremental biconnectivity (``bcc``). Edge-stream workloads
-live in ``repro.data.streams``; the serving loop in
+(``tour``), incremental biconnectivity (``bcc``), and the self-healing
+layer (DESIGN.md §11): fault injection (``chaos``), O(log n) invariant
+auditing (``audit``), and the scoped-repair/rebuild ladder
+(``recovery``). Edge-stream workloads live in ``repro.data.streams``;
+the resilient serving loop in ``repro.launch.resilient`` /
 ``repro.launch.serve_stream``.
 """
+from repro.dynamic.audit import AuditReport, audit_forest
 from repro.dynamic.bcc import DynamicBCC, refresh_bcc
+from repro.dynamic.chaos import (INJECTORS, POLLUTERS, inject,
+                                 merge_quarantine, pollute_stream,
+                                 sanitize_batch)
 from repro.dynamic.forest import (DynamicForest, apply_batch, edge_slots,
                                   forest_empty, forest_from_graph,
                                   live_graph)
+from repro.dynamic.recovery import rebuild_forest, recover, repair_forest
 from repro.dynamic.replay import init_state, replay_batch, stream_capacity
 from repro.dynamic.tour import refresh_tour
 
 __all__ = [
-    "DynamicBCC", "DynamicForest", "apply_batch", "edge_slots",
-    "forest_empty", "forest_from_graph", "init_state", "live_graph",
-    "replay_batch", "refresh_bcc", "refresh_tour", "stream_capacity",
+    "AuditReport", "DynamicBCC", "DynamicForest", "INJECTORS", "POLLUTERS",
+    "apply_batch", "audit_forest", "edge_slots", "forest_empty",
+    "forest_from_graph", "init_state", "inject", "live_graph",
+    "merge_quarantine", "pollute_stream", "rebuild_forest", "recover",
+    "refresh_bcc", "refresh_tour", "repair_forest", "replay_batch",
+    "sanitize_batch", "stream_capacity",
 ]

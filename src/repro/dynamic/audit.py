@@ -1,0 +1,283 @@
+"""O(log n)-sync invariant auditing for the dynamic forest (DESIGN.md §11).
+
+``audit_forest`` checks every structural invariant a healthy
+``DynamicForest`` maintains — entirely device-side, built from the same
+engine primitives the read path uses (one bounded ``compress_full`` plus
+masked scatters/reductions), so a full audit costs
+⌈log2(depth)/k⌉ + 1 convergence syncs like any other engine phase:
+
+  * **acyclicity / rooted-ness** — every parent chain must reach a fixed
+    point *of the original table* (the ``validate.reaches_root``
+    technique: bounded compression, then re-check against the uncompressed
+    table so even-length cycles cannot fake a root);
+  * **root fixed-point** — every claimed representative is in range and
+    self-parented;
+  * **rep-partition consistency** — ``rep == roots_of(parent)``, the
+    invariant all scoped primitives rely on;
+  * **tree cover** — every non-root vertex is the child endpoint of
+    exactly one live tree slot, and roots of none;
+  * **tree-slot sanity** — ``tree_mask ⊆ pool_valid``, tree endpoints in
+    range, parent-linked, and in one claimed component;
+  * **spanning** — no live pool edge crosses two claimed components
+    (the forest must span the pool graph: a cross edge is a link the
+    maintenance loop would never have left behind);
+  * **tree-edge count** — #live tree slots == n − #parent self-loops (the
+    global n − c redundancy check);
+  * **snapshot freshness** (optional) — a ``TourNumbering`` must agree
+    with the live parent array outside ``state.dirty``; a ``DynamicBCC``'s
+    snapshots must agree with the live parent/pool arrays. A mismatch is
+    exactly the fault ``chaos.inject_stale_bcc`` plants: a cache whose
+    labels no snapshot-diff will ever invalidate.
+
+The returned ``AuditReport`` is a pytree: scalar verdicts for the ladder
+in ``dynamic.recovery``, plus the per-vertex ``comp_violating`` mask —
+the violation set closed over *both* the claimed (``rep``) and actual
+(compressed-root) components, which is the scope the repair path rebuilds.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compress import DEFAULT_JUMPS, compress_full
+from repro.core.euler import TourNumbering
+from repro.dynamic.bcc import DynamicBCC
+from repro.dynamic.forest import DynamicForest
+
+#: Sync bound for the audit compression: 64 checks × k doublings covers
+#: any real chain (2^320); cycles are the only inputs that hit the bound.
+AUDIT_MAX_SYNCS = 64
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class AuditReport:
+    """Verdicts + violation masks from one ``audit_forest`` call.
+
+    Scalars are 0-d jnp arrays; ``bool(report.healthy)`` is host-safe.
+
+    Attributes:
+      n_nodes:        static vertex count.
+      acyclic:        every chain reaches a true fixed point.
+      roots_fixed:    claimed reps are in range and self-parented.
+      rep_consistent: rep matches the compressed root everywhere.
+      tree_cover_ok:  non-roots covered by exactly one tree slot.
+      tree_slots_ok:  no tree bit on dead/unlinked/cross-component slots.
+      spanning_ok:    no live pool edge crosses two claimed components.
+      counts_ok:      #tree slots == n − #roots.
+      forest_ok:      conjunction of the seven structural verdicts.
+      tour_fresh:     tour numbering consistent with live parent (True
+                      when no tour was passed).
+      bcc_fresh:      BCC snapshots consistent with live state (True when
+                      no cache was passed).
+      healthy:        forest_ok & tour_fresh & bcc_fresh.
+      violating:      bool[n] per-vertex structural violations.
+      comp_violating: bool[n] — ``violating`` closed over claimed AND
+                      actual components (the repair scope).
+      sever:          bool[n] — the minimal cut set for the repair: a
+                      vertex whose parent pointer itself is broken
+                      (out of range, not backed by exactly one live
+                      tree slot, or a spurious cycle fixed point).
+                      Inherited damage — a subtree dragged along by an
+                      ancestor's flip, or a stale ``rep`` — is NOT in
+                      this mask: severing the one broken ancestor frees
+                      the subtree intact, and ``rep`` is re-derived
+                      over ``comp_violating`` regardless.
+      stale:          bool[n] — snapshot-staleness, component-closed (the
+                      cache-refresh scope; disjoint concern from repair).
+      bad_slots:      bool[capacity] pool slots violating tree-slot sanity.
+      n_violating:    int32 vertex count of ``comp_violating``.
+      syncs:          int32 engine convergence checks spent auditing.
+    """
+
+    n_nodes: int
+    acyclic: jnp.ndarray
+    roots_fixed: jnp.ndarray
+    rep_consistent: jnp.ndarray
+    tree_cover_ok: jnp.ndarray
+    tree_slots_ok: jnp.ndarray
+    spanning_ok: jnp.ndarray
+    counts_ok: jnp.ndarray
+    forest_ok: jnp.ndarray
+    tour_fresh: jnp.ndarray
+    bcc_fresh: jnp.ndarray
+    healthy: jnp.ndarray
+    violating: jnp.ndarray
+    comp_violating: jnp.ndarray
+    sever: jnp.ndarray
+    stale: jnp.ndarray
+    bad_slots: jnp.ndarray
+    n_violating: jnp.ndarray
+    syncs: jnp.ndarray
+
+    def tree_flatten(self):
+        return ((self.acyclic, self.roots_fixed, self.rep_consistent,
+                 self.tree_cover_ok, self.tree_slots_ok, self.spanning_ok,
+                 self.counts_ok,
+                 self.forest_ok, self.tour_fresh, self.bcc_fresh,
+                 self.healthy, self.violating, self.comp_violating,
+                 self.sever, self.stale, self.bad_slots, self.n_violating,
+                 self.syncs), self.n_nodes)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux, *children)
+
+    def summary(self) -> str:
+        """One-line human verdict (host-side)."""
+        if bool(self.healthy):
+            return f"healthy (syncs={int(self.syncs)})"
+        bad = [k for k in ("acyclic", "roots_fixed", "rep_consistent",
+                           "tree_cover_ok", "tree_slots_ok", "spanning_ok",
+                           "counts_ok", "tour_fresh", "bcc_fresh")
+               if not bool(getattr(self, k))]
+        return (f"FAULT {'+'.join(bad)} "
+                f"({int(self.n_violating)} vertices in scope, "
+                f"syncs={int(self.syncs)})")
+
+
+def _close_over_components(mask, rep_key, hop, n):
+    """Close a vertex mask over claimed (rep) and actual (hop) components."""
+    out = mask
+    for key in (rep_key, hop):
+        comp_bad = jnp.zeros((n,), jnp.bool_).at[
+            jnp.where(mask, key, n)].set(True, mode="drop")
+        out = out | comp_bad[key]
+    return out
+
+
+@partial(jax.jit, static_argnames=("n_jumps",))
+def _audit(state: DynamicForest, tn, bcc, *, n_jumps: int = DEFAULT_JUMPS):
+    n = state.n_nodes
+    verts = jnp.arange(n, dtype=jnp.int32)
+    p = state.parent
+    rep = state.rep
+
+    # ---- acyclicity + rooted-ness (reaches_root technique) ----------------
+    in_range = (p >= 0) & (p < n)
+    mapped = jnp.where(in_range, p, verts)
+    hop, syncs = compress_full(mapped, n_jumps=n_jumps,
+                               max_syncs=AUDIT_MAX_SYNCS, return_syncs=True)
+    reach = mapped[hop] == hop          # true fixed point of the original
+    viol = ~reach | ~in_range
+    acyclic = jnp.all(reach)
+
+    # ---- root fixed-point + rep partition ---------------------------------
+    rep_in_range = (rep >= 0) & (rep < n)
+    safe_rep = jnp.clip(rep, 0, n - 1)
+    root_fixed_v = rep_in_range & (mapped[safe_rep] == safe_rep)
+    rep_ok_v = rep_in_range & (rep == hop)
+    viol = viol | ~root_fixed_v | ~rep_ok_v
+    roots_fixed = jnp.all(root_fixed_v)
+    rep_consistent = jnp.all(rep_ok_v)
+
+    # ---- tree-slot sanity --------------------------------------------------
+    u, v = state.pool_src, state.pool_dst
+    live, tree = state.pool_valid, state.tree_mask
+    ep_ok = (u >= 0) & (u < n) & (v >= 0) & (v < n)
+    uc = jnp.clip(u, 0, n - 1)
+    vc = jnp.clip(v, 0, n - 1)
+    linked = (mapped[uc] == vc) | (mapped[vc] == uc)
+    same_rep = rep[uc] == rep[vc]
+    bad_slots = ((tree & ~live)
+                 | (tree & live & (~ep_ok | ~linked | ~same_rep))
+                 | (live & ~ep_ok))
+    tree_slots_ok = ~jnp.any(bad_slots)
+    # Spanning: a live in-range edge between two claimed components is a
+    # link the maintenance loop would never have left pending — either an
+    # injected endpoint redirect or a corrupted rep. Its endpoints join
+    # the violation set so the repair scope covers (and relinks) both
+    # sides; the slot itself is *good* data, not quarantined.
+    cross = live & ep_ok & (rep[uc] != rep[vc])
+    spanning_ok = ~jnp.any(cross)
+    for ends in (u, v):
+        viol = viol.at[jnp.where((bad_slots | cross) & ep_ok, ends, n)].set(
+            True, mode="drop")
+
+    # ---- tree cover: each non-root child of exactly one tree slot ---------
+    slot_tree = tree & live & linked & ep_ok
+    child_is_v = mapped[vc] == uc
+    child = jnp.where(child_is_v, vc, uc)
+    count = jnp.zeros((n,), jnp.int32).at[
+        jnp.where(slot_tree, child, n)].add(1, mode="drop")
+    nonroot = in_range & (p != verts)
+    cover_ok_v = jnp.where(nonroot, count == 1, count == 0)
+    viol = viol | ~cover_ok_v
+    tree_cover_ok = jnp.all(cover_ok_v)
+
+    # Minimal cut set for the scoped repair: vertices whose OWN parent
+    # pointer is unusable. A redirected/forged pointer always breaks the
+    # one-tree-slot cover at its child; a cycle whose every link is
+    # tree-backed evades cover, but even-length cycles collapse to
+    # self-fixed points under bounded compression — sever those too.
+    # (Inherited rep/reach damage below a broken ancestor heals itself
+    # once the ancestor is cut.)
+    sever = ~in_range | ~cover_ok_v | (~reach & (hop == verts))
+
+    # ---- global n − c redundancy ------------------------------------------
+    n_tree = jnp.sum((tree & live).astype(jnp.int32))
+    n_roots = jnp.sum((in_range & (p == verts)).astype(jnp.int32))
+    counts_ok = n_tree == (n - n_roots)
+
+    # ---- snapshot freshness -----------------------------------------------
+    stale = jnp.zeros((n,), jnp.bool_)
+    tour_fresh = jnp.bool_(True)
+    if tn is not None:
+        tour_stale_v = (tn.parent != mapped) & ~state.dirty
+        tour_fresh = ~jnp.any(tour_stale_v)
+        stale = stale | tour_stale_v
+    bcc_fresh = jnp.bool_(True)
+    if bcc is not None:
+        bcc_stale_v = bcc.parent != p
+        slot_mism = ((bcc.pool_src != u) | (bcc.pool_dst != v)
+                     | (bcc.pool_valid != live) | (bcc.tree_mask != tree))
+        for ends in (bcc.pool_src, bcc.pool_dst, u, v):
+            bcc_stale_v = bcc_stale_v.at[
+                jnp.where(slot_mism, ends, n)].set(True, mode="drop")
+        bcc_fresh = ~jnp.any(bcc_stale_v)
+        stale = stale | bcc_stale_v
+
+    # ---- closures + verdicts ----------------------------------------------
+    rep_key = jnp.where(rep_in_range, rep, verts)
+    comp_violating = _close_over_components(viol, rep_key, hop, n)
+    stale = _close_over_components(stale, rep_key, hop, n)
+    forest_ok = (acyclic & roots_fixed & rep_consistent & tree_cover_ok
+                 & tree_slots_ok & spanning_ok & counts_ok)
+    healthy = forest_ok & tour_fresh & bcc_fresh
+    return AuditReport(
+        n_nodes=n, acyclic=acyclic, roots_fixed=roots_fixed,
+        rep_consistent=rep_consistent, tree_cover_ok=tree_cover_ok,
+        tree_slots_ok=tree_slots_ok, spanning_ok=spanning_ok,
+        counts_ok=counts_ok,
+        forest_ok=forest_ok, tour_fresh=tour_fresh, bcc_fresh=bcc_fresh,
+        healthy=healthy, violating=viol, comp_violating=comp_violating,
+        sever=sever, stale=stale, bad_slots=bad_slots,
+        n_violating=jnp.sum(comp_violating.astype(jnp.int32)), syncs=syncs)
+
+
+def audit_forest(state: DynamicForest, tn: TourNumbering | None = None,
+                 bcc: DynamicBCC | None = None, *,
+                 n_jumps: int = DEFAULT_JUMPS) -> AuditReport:
+    """Audit every invariant of ``state`` (and optional caches) on device.
+
+    Args:
+      state: the dynamic forest to audit (may be arbitrarily corrupted —
+        no check here assumes any invariant holds).
+      tn: optional tour numbering to freshness-check against ``state``
+        (``state.dirty`` components are exempt: they are *known* stale
+        until the next ``refresh_tour``).
+      bcc: optional BCC cache to freshness-check (snapshot equality — a
+        cache that drifted from the state it claims to describe can
+        never be healed by its own snapshot diff, so the audit is the
+        only detector for it).
+      n_jumps: doubling steps per convergence sync (engine contract).
+
+    Returns:
+      AuditReport; ``report.healthy`` is the single go/no-go bit,
+      ``report.comp_violating`` the scope ``recovery.repair_forest``
+      rebuilds, ``report.stale`` the scope whose caches must refresh.
+    """
+    return _audit(state, tn, bcc, n_jumps=n_jumps)

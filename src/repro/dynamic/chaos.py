@@ -1,0 +1,364 @@
+"""Deterministic fault injection for the dynamic serving path (DESIGN.md §11).
+
+Two fault families, matching how a live ``DynamicForest`` deployment
+actually breaks:
+
+* **State corruption** (``INJECTORS``): a bit flips in device memory or a
+  bug writes a bad slot — the parent array gains a cycle or a dangling
+  pointer, ``tree_mask`` desyncs from the pool, a representative goes
+  stale, a ``DynamicBCC`` cache keeps labels for a state it no longer
+  matches. Each injector takes ``(state, bcc, rng)`` and returns the
+  corrupted ``(state, bcc, description)``; all randomness flows through
+  the caller's ``numpy`` generator, so a seed reproduces the fault
+  exactly. Every injector produces a fault that
+  ``dynamic.audit.audit_forest`` provably detects (the chaos soak in
+  tests/test_chaos_recovery.py enforces this per injector × seed).
+
+* **Stream pollution** (``POLLUTERS``): malformed traffic — out-of-range
+  vertex ids, self-loop insertions, duplicated or reordered batches,
+  deletions of edges that were never inserted. Polluters rewrite a batch
+  list; ``sanitize_batch`` is the defense that runs *in front of*
+  ``apply_batch``: it rejects malformed events by rewriting them to the
+  inert ``n_nodes`` sentinel and returns per-category quarantine
+  counters, so garbage traffic becomes an observable metric instead of
+  undefined behavior.
+
+The corruption here is honest about what is and is not recoverable: the
+edge pool is the system's ground truth, so injectors corrupt the *derived*
+structures (parent / rep / tree_mask / caches) or redirect pool endpoints
+to other live vertices — faults a pool-driven repair can heal — never the
+existence of the truth itself.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.streams import EdgeStream, StreamBatch
+from repro.dynamic.bcc import DynamicBCC
+from repro.dynamic.forest import DynamicForest
+
+
+# ---------------------------------------------------------------------------
+# state corruption
+# ---------------------------------------------------------------------------
+
+def _np_state(state: DynamicForest):
+    return {f: np.asarray(getattr(state, f)).copy()
+            for f in ("parent", "rep", "pool_src", "pool_dst",
+                      "pool_valid", "tree_mask", "dirty")}
+
+
+def _mk_state(state: DynamicForest, arrs) -> DynamicForest:
+    return DynamicForest(n_nodes=state.n_nodes,
+                         **{k: jnp.asarray(v) for k, v in arrs.items()})
+
+
+def _nonroot(parent: np.ndarray, rng: np.random.Generator) -> int:
+    """A uniformly random non-root vertex (falls back to 0 on edgeless)."""
+    cand = np.nonzero(parent != np.arange(parent.shape[0]))[0]
+    return int(rng.choice(cand)) if cand.size else 0
+
+
+def inject_parent_bitflip(state: DynamicForest, bcc, rng):
+    """Flip one bit of one parent entry — the classic soft-error model.
+
+    The flipped pointer either leaves [0, n) (dangling) or lands on some
+    other vertex, in which case v's claimed parent edge no longer matches
+    any tree slot (the audit's coverage check) and usually crosses
+    components (rep consistency).
+    """
+    arrs = _np_state(state)
+    p = arrs["parent"]
+    n = state.n_nodes
+    v = _nonroot(p, rng)
+    old = int(p[v])
+    bit = int(rng.integers(0, max(n.bit_length(), 1)))
+    new = old ^ (1 << bit)
+    if new == old:          # unreachable, but stay total
+        new = old + 1
+    p[v] = new
+    return (_mk_state(state, arrs), bcc,
+            f"parent_bitflip: parent[{v}] {old} -> {new} (bit {bit})")
+
+
+def inject_parent_cycle(state: DynamicForest, bcc, rng):
+    """Point a component's root back at one of its descendants.
+
+    Turns the root path of every vertex above the cycle into a trap:
+    pointer chasing never reaches a fixed point of the original table
+    (the acyclicity check's definition of failure).
+    """
+    arrs = _np_state(state)
+    p = arrs["parent"]
+    v = _nonroot(p, rng)
+    # Walk to v's root, then close the cycle root -> v.
+    r = v
+    for _ in range(state.n_nodes):
+        if p[r] == r:
+            break
+        r = int(p[r])
+    p[r] = v
+    return (_mk_state(state, arrs), bcc,
+            f"parent_cycle: parent[{r}] -> {v} (root re-entry)")
+
+
+def inject_rep_corrupt(state: DynamicForest, bcc, rng):
+    """Write a wrong representative — the incremental invariant breaks.
+
+    ``rep == roots_of(parent)`` is what lets every scoped primitive skip
+    clean components; a stale entry silently mis-scopes all of them.
+    """
+    arrs = _np_state(state)
+    n = state.n_nodes
+    v = int(rng.integers(0, n))
+    old = int(arrs["rep"][v])
+    new = int(rng.integers(0, n))
+    if new == old:
+        new = (new + 1) % n
+    arrs["rep"][v] = new
+    return (_mk_state(state, arrs), bcc,
+            f"rep_corrupt: rep[{v}] {old} -> {new}")
+
+
+def inject_tree_mask_desync(state: DynamicForest, bcc, rng):
+    """Desync ``tree_mask`` from the forest: drop a tree slot or forge one.
+
+    Dropping leaves a non-root vertex with no covering tree slot; forging
+    marks a live non-tree slot (or a dead slot) as a tree edge whose
+    endpoints are not parent-linked.
+    """
+    arrs = _np_state(state)
+    tm, pv = arrs["tree_mask"], arrs["pool_valid"]
+    tree_slots = np.nonzero(tm & pv)[0]
+    nontree_slots = np.nonzero(pv & ~tm)[0]
+    if not tree_slots.size and not nontree_slots.size:
+        # Empty pool: forge a tree bit on a dead slot (tree ⊆ valid breaks).
+        tm[0] = True
+        return (_mk_state(state, arrs), bcc,
+                "tree_mask_desync: forged tree bit on dead slot 0")
+    drop = bool(rng.integers(0, 2)) if tree_slots.size and \
+        nontree_slots.size else bool(tree_slots.size)
+    if drop:
+        s = int(rng.choice(tree_slots))
+        tm[s] = False
+        desc = f"tree_mask_desync: dropped tree slot {s}"
+    else:
+        s = int(rng.choice(nontree_slots))
+        tm[s] = True
+        desc = f"tree_mask_desync: forged tree slot {s}"
+    return _mk_state(state, arrs), bcc, desc
+
+
+def inject_pool_desync(state: DynamicForest, bcc, rng):
+    """Redirect one endpoint of a live tree slot to another vertex.
+
+    The pool is ground truth, so this *changes the graph* — but the
+    parent array still encodes the old edge, so state and pool disagree:
+    the forged slot fails the parent-link check and the orphaned child
+    loses its cover. Repair must re-derive the forest from the new pool.
+    """
+    arrs = _np_state(state)
+    n = state.n_nodes
+    slots = np.nonzero(arrs["tree_mask"] & arrs["pool_valid"])[0]
+    if slots.size == 0:
+        slots = np.nonzero(arrs["pool_valid"])[0]
+    if slots.size == 0:                  # empty pool: fall back to rep fault
+        return inject_rep_corrupt(state, bcc, rng)
+    s = int(rng.choice(slots))
+    side = "pool_src" if rng.integers(0, 2) else "pool_dst"
+    old = int(arrs[side][s])
+    other = int(arrs["pool_dst" if side == "pool_src" else "pool_src"][s])
+    new = int(rng.integers(0, n))
+    while new in (old, other):
+        new = (new + 1) % n
+    arrs[side][s] = new
+    return (_mk_state(state, arrs), bcc,
+            f"pool_desync: {side}[{s}] {old} -> {new}")
+
+
+def inject_stale_bcc(state: DynamicForest, bcc: DynamicBCC | None, rng):
+    """Corrupt a BCC cache *and* its snapshot — the stale-cache fault.
+
+    ``refresh_bcc``'s snapshot diff heals honest staleness by itself; the
+    dangerous fault is a cache whose labels rotted while its snapshots
+    drifted (e.g. a partial write). Scramble the labels of one component
+    and perturb the parent snapshot inside it: the audit's freshness
+    check (snapshot == live state outside ``state.dirty``) flags it, and
+    recovery re-derives the component from the live pool.
+    """
+    if bcc is None:
+        return inject_rep_corrupt(state, bcc, rng)
+    n = state.n_nodes
+    rep = np.asarray(state.rep)
+    v = int(rng.integers(0, n))
+    comp = rep == rep[v]
+    parent_snap = np.asarray(bcc.parent).copy()
+    labels = np.asarray(bcc.rep).copy()
+    arti = np.asarray(bcc.articulation).copy()
+    # Drift the snapshot at one in-component vertex and rot the labels.
+    w = int(rng.choice(np.nonzero(comp)[0]))
+    parent_snap[w] = (parent_snap[w] + 1) % n
+    labels[comp] = (labels[comp] + 1) % n
+    arti[comp] = ~arti[comp]
+    bcc2 = dataclasses.replace(bcc, parent=jnp.asarray(parent_snap),
+                               rep=jnp.asarray(labels),
+                               articulation=jnp.asarray(arti))
+    return state, bcc2, f"stale_bcc: component of {v} rotted (snap at {w})"
+
+
+#: name -> injector(state, bcc, rng) -> (state, bcc, description)
+INJECTORS = {
+    "parent_bitflip": inject_parent_bitflip,
+    "parent_cycle": inject_parent_cycle,
+    "rep_corrupt": inject_rep_corrupt,
+    "tree_mask_desync": inject_tree_mask_desync,
+    "pool_desync": inject_pool_desync,
+    "stale_bcc": inject_stale_bcc,
+}
+
+
+def inject(name: str, state: DynamicForest, bcc=None, seed: int = 0):
+    """Run one named injector with a seeded generator (test entry point)."""
+    rng = np.random.default_rng(seed)
+    return INJECTORS[name](state, bcc, rng)
+
+
+# ---------------------------------------------------------------------------
+# stream pollution
+# ---------------------------------------------------------------------------
+
+def pollute_out_of_range(batches, n, rng):
+    """Sprinkle ids outside [0, n) over insert/delete slots."""
+    out = []
+    for b in batches:
+        iu, iv = b.ins_u.copy(), b.ins_v.copy()
+        du, dv = b.del_u.copy(), b.del_v.copy()
+        for arr in (iu, du):
+            k = int(rng.integers(1, 3))
+            idx = rng.integers(0, arr.shape[0], size=k)
+            arr[idx] = rng.choice([-7, -1, n + 1, n + 13], size=k)
+        out.append(StreamBatch(ins_u=iu, ins_v=iv, del_u=du, del_v=dv))
+    return out
+
+
+def pollute_self_loops(batches, n, rng):
+    """Turn some insertions into self-loops (u, u)."""
+    out = []
+    for b in batches:
+        iu, iv = b.ins_u.copy(), b.ins_v.copy()
+        live = np.nonzero(iu < n)[0]
+        if live.size:
+            idx = rng.choice(live, size=max(1, live.size // 8),
+                             replace=False)
+            iv[idx] = iu[idx]
+        out.append(StreamBatch(ins_u=iu, ins_v=iv, del_u=b.del_u,
+                               del_v=b.del_v))
+    return out
+
+
+def pollute_duplicate_batches(batches, n, rng):
+    """Replay a batch twice in a row (at-least-once delivery)."""
+    if not batches:
+        return list(batches)
+    i = int(rng.integers(0, len(batches)))
+    out = list(batches)
+    out.insert(i, out[i])
+    return out
+
+
+def pollute_reordered_batches(batches, n, rng):
+    """Swap two adjacent batches (out-of-order delivery)."""
+    out = list(batches)
+    if len(out) >= 2:
+        i = int(rng.integers(0, len(out) - 1))
+        out[i], out[i + 1] = out[i + 1], out[i]
+    return out
+
+
+def pollute_phantom_deletes(batches, n, rng):
+    """Request deletions of edges that were never inserted."""
+    out = []
+    for b in batches:
+        du, dv = b.del_u.copy(), b.del_v.copy()
+        pad = np.nonzero(du >= n)[0]
+        if pad.size:
+            k = min(int(rng.integers(1, 3)), pad.size)
+            idx = pad[:k]
+            du[idx] = rng.integers(0, n, size=k)
+            dv[idx] = rng.integers(0, n, size=k)
+        out.append(StreamBatch(ins_u=b.ins_u, ins_v=b.ins_v, del_u=du,
+                               del_v=dv))
+    return out
+
+
+#: name -> polluter(batches, n, rng) -> batches
+POLLUTERS = {
+    "out_of_range": pollute_out_of_range,
+    "self_loops": pollute_self_loops,
+    "duplicate_batches": pollute_duplicate_batches,
+    "reordered_batches": pollute_reordered_batches,
+    "phantom_deletes": pollute_phantom_deletes,
+}
+
+
+def pollute_stream(stream: EdgeStream, kinds, seed: int = 0) -> EdgeStream:
+    """Apply named polluters to a stream's batch list, deterministically."""
+    rng = np.random.default_rng(seed)
+    batches = list(stream.batches)
+    for kind in kinds:
+        batches = POLLUTERS[kind](batches, stream.n_nodes, rng)
+    return dataclasses.replace(stream, batches=tuple(batches))
+
+
+# ---------------------------------------------------------------------------
+# sanitizer
+# ---------------------------------------------------------------------------
+
+def sanitize_batch(b: StreamBatch, n_nodes: int):
+    """Reject malformed events in front of ``apply_batch`` (DESIGN.md §11).
+
+    Classification per event (an event is padding iff both endpoints are
+    exactly the ``n_nodes`` sentinel — padding is never counted):
+
+      * ``ins_out_of_range`` / ``del_out_of_range`` — an endpoint outside
+        [0, n) that is not the sentinel;
+      * ``ins_self_loop`` / ``del_self_loop`` — u == v (a self-loop can
+        never be a pool edge, so deleting one can never match).
+
+    Rejected events are rewritten to sentinel padding, so the sanitized
+    batch is shape-identical and safe for the jitted ``apply_batch``.
+    Deletions of never-inserted edges are *well-formed* traffic and pass
+    through — ``edge_slots`` counts them as unmatched downstream.
+
+    Returns:
+      (StreamBatch sanitized, quarantine: dict[str, int]).
+    """
+    n = n_nodes
+    out = {}
+    arrs = {}
+    for kind, (u, v) in (("ins", (b.ins_u, b.ins_v)),
+                         ("del", (b.del_u, b.del_v))):
+        u = np.asarray(u)
+        v = np.asarray(v)
+        padding = (u == n) & (v == n)
+        in_range = (u >= 0) & (u < n) & (v >= 0) & (v < n)
+        oor = ~padding & ~in_range
+        self_loop = ~padding & in_range & (u == v)
+        bad = oor | self_loop
+        out[f"{kind}_out_of_range"] = int(oor.sum())
+        out[f"{kind}_self_loop"] = int(self_loop.sum())
+        arrs[f"{kind}_u"] = np.where(bad, n, u).astype(np.int32)
+        arrs[f"{kind}_v"] = np.where(bad, n, v).astype(np.int32)
+    clean = StreamBatch(ins_u=arrs["ins_u"], ins_v=arrs["ins_v"],
+                        del_u=arrs["del_u"], del_v=arrs["del_v"])
+    return clean, out
+
+
+def merge_quarantine(total: dict, delta: dict) -> dict:
+    """Accumulate per-category quarantine counters across batches."""
+    for k, v in delta.items():
+        total[k] = total.get(k, 0) + v
+    return total

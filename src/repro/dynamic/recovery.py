@@ -1,0 +1,334 @@
+"""Graceful degradation + scoped repair for the dynamic forest (DESIGN.md §11).
+
+The escalation ladder, cheapest rung first:
+
+  1. **Audit** (``dynamic.audit.audit_forest``) — O(log n) syncs; if
+     healthy, nothing else runs.
+  2. **Scoped repair** (``repair_forest``) — *fragment-preserving*
+     rebuild of only the violating components: clear the parent pointer
+     at just the directly-violating vertices (every cycle member fails
+     the reaches-root check, so clearing them breaks all cycles), keep
+     every tree edge that is still a genuine parent link, re-derive
+     ``rep`` with one ``compress_scoped`` pass over the violation
+     closure, then drain cross edges with the same union-by-size
+     ``core.reroot.link_components`` loop ``apply_batch`` uses. Intact
+     components pay zero doubling work, and intact *subtrees inside the
+     damaged component* survive as fragments — so the link loop runs
+     O(log #fragments) rounds, scaling with the number of faults rather
+     than the size of the component they landed in.
+  3. **Full rebuild** (``rebuild_forest``) — if severing cannot break
+     every cycle (``_post_sever_acyclic`` — the one corruption shape
+     the cut-set heuristic misses) or a second audit still fails,
+     re-derive
+     parent / rep / tree_mask from scratch: GConn connectivity over the
+     pool + Euler-tour rooting, the ``forest_from_graph`` path applied
+     to the live pool in place.
+
+The edge pool is ground truth throughout: repair never invents edges, it
+re-derives the spanning structure from what the pool holds (slots with
+out-of-range endpoints are quarantined — invalidated and counted — since
+no spanning structure can be derived from them).
+
+``recover`` drives the ladder end to end and then heals the caches: the
+repair scope is already marked dirty, so one incremental
+``refresh_tour`` / ``refresh_bcc`` restores the tour numbering and BCC
+labels bit-identically to a from-scratch recompute; a full rebuild
+invalidates both caches instead. Sync counts for every rung are reported
+(``benchmarks/table6_robustness.py`` tracks scoped-repair vs
+full-rebuild sync totals — the device-independent recovery cost).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compress import DEFAULT_JUMPS, compress_scoped
+from repro.core.connectivity import connected_components
+from repro.core.euler import euler_tour_root
+from repro.core.reroot import link_components
+from repro.core.compress import compress_full
+from repro.dynamic.audit import AUDIT_MAX_SYNCS, AuditReport, audit_forest
+from repro.dynamic.bcc import refresh_bcc
+from repro.dynamic.forest import DynamicForest, live_graph
+from repro.dynamic.tour import refresh_tour
+
+
+def _quarantine_pool(state_arrays, n):
+    """Invalidate live slots with out-of-range endpoints (no truth there)."""
+    src, dst, valid, tree = state_arrays
+    ep_ok = (src >= 0) & (src < n) & (dst >= 0) & (dst < n)
+    drop = valid & ~ep_ok
+    n_dropped = jnp.sum(drop.astype(jnp.int32))
+    valid = valid & ~drop
+    tree = tree & ~drop
+    src = jnp.where(drop, n, src)
+    dst = jnp.where(drop, n, dst)
+    return (src, dst, valid, tree), n_dropped
+
+
+@partial(jax.jit, static_argnames=("n_jumps", "use_kernel"))
+def _repair(state: DynamicForest, sever: jnp.ndarray, scope: jnp.ndarray,
+            *, n_jumps: int = DEFAULT_JUMPS, use_kernel: bool = False):
+    n = state.n_nodes
+    verts = jnp.arange(n, dtype=jnp.int32)
+    levels = max(1, (n - 1).bit_length())
+
+    # Sever the parent pointer at exactly the audit's cut set — the
+    # vertices whose own pointer is broken (redirects break the tree-
+    # slot cover at their child; cycles break it at the entry vertex).
+    # Everything else in the damaged component keeps its parent, so the
+    # intact subtrees survive as rooted fragments the link loop below
+    # stitches back together.
+    in_range = (state.parent >= 0) & (state.parent < n)
+    p = jnp.where(in_range & ~sever, state.parent, verts)
+
+    (pool_src, pool_dst, pool_valid, tree_mask), n_quarantined = \
+        _quarantine_pool((state.pool_src, state.pool_dst,
+                          state.pool_valid, state.tree_mask), n)
+    uc = jnp.clip(pool_src, 0, n - 1)
+    vc = jnp.clip(pool_dst, 0, n - 1)
+
+    # A tree bit survives iff the slot is still a genuine parent link
+    # under the severed table. Forged bits aren't parent-linked, a
+    # cleared vertex self-points (so the slot for its old parent edge
+    # drops out), and duplicate covers mark the child violating — both
+    # claimants lose the bit and the link loop re-elects one winner.
+    tree_mask = tree_mask & pool_valid & ((p[uc] == vc) | (p[vc] == uc))
+
+    # Re-derive rep over the violation closure. The closure is a union
+    # of complete components (audit contract), so severed chains never
+    # escape it — compress_scoped's component-closed-mask contract holds
+    # even though the input was corrupted. The sync bound is a backstop:
+    # callers gate on ``repair_viable`` so the severed table is acyclic
+    # and the loop converges far below it.
+    comp, rep_syncs = compress_scoped(p, scope, n_jumps=n_jumps,
+                                      use_kernel=use_kernel,
+                                      return_syncs=True,
+                                      max_syncs=AUDIT_MAX_SYNCS)
+    rt = jnp.where(scope, comp, state.rep)
+
+    # Drain cross edges — the apply_batch link loop (union-by-size mover,
+    # one winner per moving component, PR-RST path reversal). Candidates
+    # exist only between fragments the severing created (plus any
+    # spanning-violation cross edges the audit pulled into scope), so
+    # the round count scales with the fault count, not component size.
+    def body(carry):
+        p, rt, tree_mask, rnd, links, syncs, _ = carry
+        ru = rt[uc]
+        rv = rt[vc]
+        cand = pool_valid & (ru != rv)
+        size = jnp.zeros((n,), jnp.int32).at[rt].add(1)
+        su, sv = size[ru], size[rv]
+        u_moves = (su < sv) | ((su == sv) & (ru > rv))
+        start = jnp.where(u_moves, uc, vc)
+        target = jnp.where(u_moves, vc, uc)
+        p, rt, is_winner, s = link_components(
+            p, rt, start, target, cand, levels=levels, n_jumps=n_jumps,
+            use_kernel=use_kernel, return_syncs=True)
+        tree_mask = tree_mask | is_winner
+        n_won = jnp.sum(is_winner.astype(jnp.int32))
+        rnd = rnd + (n_won > 0).astype(jnp.int32)
+        return p, rt, tree_mask, rnd, links + n_won, syncs + s, n_won > 0
+
+    def cond(carry):
+        *_rest, rnd, _l, _s, changed = carry
+        return changed & (rnd < n)
+
+    p, rt, tree_mask, rounds, links, link_syncs, _ = jax.lax.while_loop(
+        cond, body, (p, rt, tree_mask, jnp.int32(0), jnp.int32(0),
+                     jnp.int32(0), jnp.bool_(True)))
+
+    # Every component that absorbed repaired vertices needs a tour
+    # refresh — mark it dirty for the incremental path.
+    comp_touched = jnp.zeros((n,), jnp.bool_).at[
+        jnp.where(scope, rt, n)].set(True, mode="drop")
+    dirty = state.dirty | comp_touched[rt] | scope
+
+    new_state = DynamicForest(
+        n_nodes=n, parent=p, rep=rt, pool_src=pool_src, pool_dst=pool_dst,
+        pool_valid=pool_valid, tree_mask=tree_mask, dirty=dirty)
+    stats = {"rounds": rounds, "links": links,
+             "severed": jnp.sum((sever & in_range).astype(jnp.int32)),
+             "repaired": jnp.sum(scope.astype(jnp.int32)),
+             "quarantined_slots": n_quarantined,
+             "sync_total": rep_syncs + link_syncs + rounds}
+    return new_state, stats
+
+
+def repair_forest(state: DynamicForest, report: AuditReport, *,
+                  n_jumps: int = DEFAULT_JUMPS, use_kernel: bool = False):
+    """Repair only the audit's violating components from the live pool.
+
+    Args:
+      state: the (possibly corrupted) forest.
+      report: the ``audit_forest`` result naming the damage
+        (``sever`` — the minimal cut set — and ``comp_violating``, the
+        component closure whose ``rep`` is re-derived).
+
+    Returns:
+      (state', stats) — stats holds int32 scalars ``rounds`` / ``links``
+      (link-loop work), ``severed`` (parent pointers cut), ``repaired``
+      (vertices in the rebuild scope), ``quarantined_slots`` (pool slots
+      dropped for out-of-range endpoints), and ``sync_total``
+      (scoped-compression + overlay-compression convergence checks +
+      link rounds — the scoped-recovery cost ``table6_robustness``
+      compares against ``rebuild_forest``).
+    """
+    return _repair(state, report.sever, report.comp_violating,
+                   n_jumps=n_jumps, use_kernel=use_kernel)
+
+
+@jax.jit
+def _post_sever_acyclic(state: DynamicForest, sever: jnp.ndarray):
+    """Would cutting the audit's sever set leave an acyclic table?
+
+    The scoped repair is only total on an acyclic severed table (its
+    link loop compresses an overlay whose acyclicity rests on correct
+    reps). The sever heuristic breaks every cycle our injectors can
+    plant — a redirected pointer always breaks the tree-slot cover at
+    its child — but a cycle whose every link carries a *forged* tree
+    bit with consistent cover evades it when its length is odd (no
+    self-fixed point under doubling either). One bounded compression
+    answers whether severing suffices; if not, ``recover`` escalates
+    straight to the full rebuild.
+    """
+    n = state.n_nodes
+    verts = jnp.arange(n, dtype=jnp.int32)
+    in_range = (state.parent >= 0) & (state.parent < n)
+    p = jnp.where(in_range & ~sever, state.parent, verts)
+    hop = compress_full(p, max_syncs=AUDIT_MAX_SYNCS)
+    return jnp.all(p[hop] == hop)
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def _rebuild(state: DynamicForest, *, use_kernel: bool = False):
+    n = state.n_nodes
+    cap = state.pool_src.shape[0]
+
+    (pool_src, pool_dst, pool_valid, _tree), n_quarantined = \
+        _quarantine_pool((state.pool_src, state.pool_dst,
+                          state.pool_valid, state.tree_mask), n)
+    cleaned = DynamicForest(
+        n_nodes=n, parent=state.parent, rep=state.rep, pool_src=pool_src,
+        pool_dst=pool_dst, pool_valid=pool_valid,
+        tree_mask=jnp.zeros((cap,), jnp.bool_), dirty=state.dirty)
+
+    rep, forest_mask, cc_rounds = connected_components(
+        live_graph(cleaned), use_kernel=use_kernel)
+
+    # Winner half-edges are canonical (e < capacity), so the undirected
+    # tree mask is the first half of forest_mask (forest_from_graph's
+    # guarantee, regression-tested on connected_components).
+    tree_mask = forest_mask[:cap] & pool_valid
+
+    t = max(n - 1, 1)
+    m2 = forest_mask.shape[0]
+    slots = jnp.nonzero(forest_mask, size=t, fill_value=m2)[0]
+    ok = slots < m2
+    safe = jnp.clip(slots, 0, max(m2 - 1, 0))
+    lg_src = jnp.concatenate([pool_src, pool_dst])
+    lg_dst = jnp.concatenate([pool_dst, pool_src])
+    fu = jnp.where(ok, lg_src[safe], n)
+    fv = jnp.where(ok, lg_dst[safe], n)
+    parent, rank_syncs = euler_tour_root(n, fu, fv, ok, rep,
+                                         use_kernel=use_kernel,
+                                         return_syncs=True)
+
+    new_state = DynamicForest(
+        n_nodes=n, parent=parent, rep=rep, pool_src=pool_src,
+        pool_dst=pool_dst, pool_valid=pool_valid, tree_mask=tree_mask,
+        dirty=jnp.ones((n,), jnp.bool_))
+    stats = {"cc_rounds": cc_rounds, "rank_syncs": rank_syncs,
+             "quarantined_slots": n_quarantined,
+             "sync_total": cc_rounds + rank_syncs}
+    return new_state, stats
+
+
+def rebuild_forest(state: DynamicForest, *, use_kernel: bool = False):
+    """From-scratch rebuild: re-derive the forest from the live pool.
+
+    The last rung of the ladder — GConn connectivity + Euler-tour
+    rooting over the pool (each component rooted at its GConn
+    representative), ignoring the existing parent / rep / tree_mask
+    entirely. Everything comes back dirty (the caches must fully
+    refresh).
+
+    Returns:
+      (state', stats) — ``cc_rounds`` (hook/compress rounds),
+      ``rank_syncs`` (list-ranking convergence checks),
+      ``quarantined_slots``, and ``sync_total = cc_rounds + rank_syncs``.
+    """
+    return _rebuild(state, use_kernel=use_kernel)
+
+
+def recover(state: DynamicForest, tn=None, bcc=None, *,
+            n_jumps: int = DEFAULT_JUMPS, use_kernel: bool = False):
+    """Audit and, if needed, repair the forest and heal its caches.
+
+    The full ladder: audit → scoped repair → re-audit → full rebuild →
+    final audit (raises ``RuntimeError`` if even the rebuild fails the
+    audit — the pool itself must be unusable). Cache healing rides the
+    scoped machinery: the repair scope lands in ``state.dirty`` (plus
+    any audit-flagged staleness), so the tour refresh is incremental,
+    and ``refresh_bcc``'s snapshot diff picks up exactly the repaired
+    slots/components. After a full rebuild both caches recompute from
+    scratch.
+
+    Args:
+      state: the forest to check/repair.
+      tn: optional cached ``TourNumbering`` (refreshed and returned).
+      bcc: optional cached ``DynamicBCC`` (refreshed and returned).
+
+    Returns:
+      (state', tn', bcc', report, info) — ``report`` is the *initial*
+      audit; ``info`` is a host-side dict: ``mode`` in
+      {"clean", "refresh", "scoped", "full"}, ``n_violating``,
+      ``audit_syncs``, and the repair/rebuild stats that ran
+      (``repair_sync_total`` / ``rebuild_sync_total``).
+    """
+    report = audit_forest(state, tn, bcc, n_jumps=n_jumps)
+    info = {"mode": "clean", "n_violating": int(report.n_violating),
+            "audit_syncs": int(report.syncs)}
+    if bool(report.healthy):
+        return state, tn, bcc, report, info
+
+    if not bool(report.forest_ok):
+        viable = bool(_post_sever_acyclic(state, report.sever))
+        if viable:
+            state, rstats = repair_forest(state, report, n_jumps=n_jumps,
+                                          use_kernel=use_kernel)
+            info["mode"] = "scoped"
+            info["repair_sync_total"] = int(rstats["sync_total"])
+            info["repaired"] = int(rstats["repaired"])
+        if not viable or not bool(
+                audit_forest(state, n_jumps=n_jumps).forest_ok):
+            state, bstats = rebuild_forest(state, use_kernel=use_kernel)
+            info["mode"] = "full"
+            info["rebuild_sync_total"] = int(bstats["sync_total"])
+            tn = None       # nothing cached survives a full rebuild
+            bcc = None
+            final = audit_forest(state, n_jumps=n_jumps)
+            if not bool(final.forest_ok):
+                raise RuntimeError(
+                    "unrecoverable: full rebuild still fails the audit: "
+                    + final.summary())
+    else:
+        info["mode"] = "refresh"        # structure fine, caches stale
+
+    # Heal the caches. Staleness beyond the repair scope (a rotted
+    # snapshot in an otherwise-clean component) must also land in the
+    # dirty mask so the incremental tour refresh recomputes it.
+    if tn is not None or bcc is not None:
+        if bool(jnp.any(report.stale)):
+            state = dataclasses.replace(state,
+                                        dirty=state.dirty | report.stale)
+    if tn is not None:
+        tn, state = refresh_tour(state, tn, use_kernel=use_kernel)
+    elif bcc is not None or info["mode"] == "full":
+        tn, state = refresh_tour(state, None, use_kernel=use_kernel)
+    if bcc is not None or (info["mode"] == "full" and tn is not None):
+        bcc = refresh_bcc(state, bcc, tour=tn, use_kernel=use_kernel)
+    return state, tn, bcc, report, info

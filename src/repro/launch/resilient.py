@@ -1,0 +1,318 @@
+"""Self-healing streaming loop: watchdog, audit cadence, checkpoints.
+
+``ResilientStreamLoop`` wraps the batch-dynamic serving path
+(``dynamic.replay.replay_batch`` + cadenced tour/BCC refreshes) in the
+fault-tolerance posture ``train.fault.FaultTolerantLoop`` gives the
+training loop (DESIGN.md §8, §11), adapted to the dynamic-forest state:
+
+* **Watchdog + retry** — each batch applies under a wall-clock watchdog;
+  on ``StepTimeout`` / JAX runtime errors the batch retries from the
+  last good state (``replay_batch`` is a pure function of
+  (state, batch), so retry is sound). Final failure publishes a last
+  checkpoint and re-raises for the scheduler.
+* **Straggler EWMA** — per-batch wall times feed an EWMA; outliers are
+  recorded with their step index.
+* **Invariant auditing** (``--audit-every``) — every k batches the
+  O(log n)-sync ``dynamic.audit.audit_forest`` checks the forest and its
+  caches; on a violation the ``dynamic.recovery`` ladder runs (scoped
+  repair, escalating to full rebuild) and the event is recorded. When
+  auditing is on, one final recover runs after the last batch so the
+  loop never hands back a corrupted state.
+* **Chaos injection** (``--chaos``) — deterministic seeded fault
+  injection (``dynamic.chaos.INJECTORS``) at its own cadence, *before*
+  the batch applies: the fault rides the stream until the next audit,
+  exactly like a real soft error would. Seeds derive from
+  (chaos_seed, step), so a resumed run replays the same faults.
+* **Sanitization** (``--sanitize``) — ``chaos.sanitize_batch`` runs in
+  front of every apply; per-category quarantine counters accumulate in
+  ``loop.quarantine``.
+* **Checkpoint / resume** — every ``ckpt_every`` batches the full
+  serving state (forest + tour numbering + BCC cache) is published
+  atomically via ``train.checkpoint`` with the stream cursor in the
+  manifest; ``resume()`` restores the newest checkpoint and ``run``
+  continues from the recorded cursor. Everything downstream of the
+  cursor is deterministic (apply, refresh, audit, repair, injection),
+  so a killed-and-resumed run reaches a final state *bit-identical* to
+  an uninterrupted one (tests/test_chaos_recovery.py enforces this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import logging
+import pathlib
+import time
+from typing import Any, Callable, Sequence
+
+import jax
+import numpy as np
+
+from repro.data.streams import EdgeStream
+from repro.dynamic.audit import audit_forest
+from repro.dynamic.chaos import INJECTORS, merge_quarantine, sanitize_batch
+from repro.dynamic.recovery import recover
+from repro.dynamic.replay import init_state, replay_batch
+from repro.dynamic.tour import refresh_tour
+from repro.dynamic.bcc import refresh_bcc
+from repro.train import checkpoint as ckpt
+from repro.train.fault import StepTimeout
+
+log = logging.getLogger("repro.resilient")
+
+
+@dataclasses.dataclass
+class ResilientStreamLoop:
+    """Fault-tolerant driver for one dynamic forest under an edge stream.
+
+    Build with ``from_stream`` (which seeds the state and, when tour/BCC
+    maintenance is on, forces the initial cache refreshes so the
+    checkpoint pytree structure is fixed for the loop's lifetime), call
+    ``resume()`` if restarts should pick up prior progress, then
+    ``run(stream.batches)``.
+    """
+
+    state: Any                               # DynamicForest
+    tn: Any = None                           # TourNumbering | None
+    bcc: Any = None                          # DynamicBCC | None
+
+    tour_mode: str = "incremental"           # incremental | full | off
+    bcc_mode: str = "off"                    # incremental | full | off
+    tour_every: int = 4
+
+    ckpt_dir: str | pathlib.Path | None = None
+    ckpt_every: int = 0
+    keep: int = 3
+    async_ckpt: bool = True
+
+    audit_every: int = 0
+    chaos: Sequence[str] = ()
+    chaos_every: int = 1
+    chaos_seed: int = 0
+    sanitize: bool = False
+
+    max_retries: int = 2
+    step_timeout_s: float | None = None
+    straggler_factor: float = 3.0
+    use_kernel: bool = False
+    apply_fn: Callable = None                # (state, batch) -> (state, stats)
+
+    # progress + telemetry
+    cursor: int = 0
+    applied: int = 0
+    dropped_overflow: int = 0
+    dropped_unmatched: int = 0
+    retries: int = 0
+    lat: list = dataclasses.field(default_factory=list)
+    tour_lat: list = dataclasses.field(default_factory=list)
+    bcc_lat: list = dataclasses.field(default_factory=list)
+    stragglers: list = dataclasses.field(default_factory=list)
+    quarantine: dict = dataclasses.field(default_factory=dict)
+    injected: list = dataclasses.field(default_factory=list)
+    recoveries: list = dataclasses.field(default_factory=list)
+    last_report: Any = None
+    _ewma: float | None = None
+    _writer: Any = None
+
+    def __post_init__(self):
+        if self.apply_fn is None:
+            self.apply_fn = replay_batch
+
+    # ---- construction ------------------------------------------------------
+
+    @classmethod
+    def from_stream(cls, stream: EdgeStream, capacity: int | None = None,
+                    **config) -> "ResilientStreamLoop":
+        state = init_state(stream, capacity)
+        loop = cls(state=state, **config)
+        # Fix the checkpoint pytree structure up front: when maintenance
+        # is on, the caches exist from step 0.
+        if loop.tour_mode != "off" or loop.bcc_mode != "off":
+            loop.tn, loop.state = refresh_tour(
+                loop.state, None, use_kernel=loop.use_kernel)
+        if loop.bcc_mode != "off":
+            loop.bcc = refresh_bcc(loop.state, None, tour=loop.tn,
+                                   use_kernel=loop.use_kernel)
+        return loop
+
+    # ---- checkpointing -----------------------------------------------------
+
+    def _ckpt_tree(self):
+        """The serving state as one pytree; {} stands in for a disabled
+        cache so the tree structure never changes across the run."""
+        return {"forest": self.state,
+                "tour": self.tn if self.tn is not None else {},
+                "bcc": self.bcc if self.bcc is not None else {}}
+
+    def _save(self, blocking: bool | None = None):
+        if self.ckpt_dir is None:
+            return
+        if self._writer is not None:
+            self._writer.join()              # backpressure: one in flight
+            self._writer = None
+        self._writer = ckpt.save(
+            self.ckpt_dir, self._ckpt_tree(), self.cursor,
+            data_cursor=self.cursor, keep=self.keep,
+            blocking=blocking if blocking is not None
+            else not self.async_ckpt)
+
+    def resume(self) -> int:
+        """Restore the newest checkpoint, if any; returns the cursor."""
+        if self.ckpt_dir is None or ckpt.latest_step(self.ckpt_dir) is None:
+            return self.cursor
+        tree, manifest = ckpt.restore(self.ckpt_dir, self._ckpt_tree())
+        self.state = tree["forest"]
+        if self.tn is not None:
+            self.tn = tree["tour"]
+        if self.bcc is not None:
+            self.bcc = tree["bcc"]
+        self.cursor = int(manifest["data_cursor"])
+        log.info("resumed at batch %d", self.cursor)
+        return self.cursor
+
+    # ---- fault machinery ---------------------------------------------------
+
+    def _inject(self, step: int):
+        name = self.chaos[(step // max(self.chaos_every, 1))
+                          % len(self.chaos)]
+        rng = np.random.default_rng((self.chaos_seed, step))
+        self.state, bcc2, desc = INJECTORS[name](self.state, self.bcc, rng)
+        if self.bcc is not None:
+            self.bcc = bcc2
+        self.injected.append((step, desc))
+        log.warning("chaos @%d: %s", step, desc)
+
+    def _recover(self, step: int):
+        self.state, tn2, bcc2, report, info = recover(
+            self.state, self.tn, self.bcc, use_kernel=self.use_kernel)
+        if self.tn is not None and tn2 is not None:
+            self.tn = tn2
+        if self.bcc is not None and bcc2 is not None:
+            self.bcc = bcc2
+        self.last_report = report
+        if info["mode"] != "clean":
+            self.recoveries.append((step, info))
+            log.warning("recovery @%d: %s -> %s", step, report.summary(),
+                        info["mode"])
+        return info
+
+    def _structural_guard(self) -> bool:
+        """Bounded structural pre-check (the hot-path admission guard).
+
+        ``apply_batch`` and the refreshes *require* the forest
+        invariants: the engine's unbounded convergence loops never
+        terminate on a cyclic parent table, and a corrupted ``rep``
+        breaks the link loop's acyclic-overlay contract (two components
+        can graft onto each other and cycle the overlay). So when chaos
+        is on, every step re-verifies the structural invariants with the
+        bounded audit (``audit_forest`` spends ≤ ``AUDIT_MAX_SYNCS``
+        convergence checks and is total on arbitrary corruption) and
+        triggers an out-of-cadence recovery on violation. Cache-only
+        faults (stale BCC snapshots) pass the guard and wait for the
+        cadenced audit — cheap structural invariant on the hot path,
+        deep audit (incl. caches) on cadence.
+        """
+        return bool(audit_forest(self.state).forest_ok)
+
+    def _watchdog_apply(self, batch):
+        t0 = time.perf_counter()
+        new_state, stats = self.apply_fn(self.state, batch)
+        jax.block_until_ready(new_state.parent)
+        dt = time.perf_counter() - t0
+        if self.step_timeout_s and dt > self.step_timeout_s:
+            raise StepTimeout(f"batch took {dt:.1f}s "
+                              f"> {self.step_timeout_s}s")
+        return new_state, stats, dt
+
+    # ---- the loop ----------------------------------------------------------
+
+    def step(self, step: int, batch):
+        """Process one batch end to end (inject → sanitize → apply →
+        refresh → audit → checkpoint); returns (stats, dt)."""
+        n = self.state.n_nodes
+        if self.chaos and (step + 1) % max(self.chaos_every, 1) == 0:
+            self._inject(step)
+        if self.chaos and not self._structural_guard():
+            self._recover(step)
+        if self.sanitize:
+            batch, q = sanitize_batch(batch, n)
+            merge_quarantine(self.quarantine, q)
+
+        for attempt in range(self.max_retries + 1):
+            try:
+                new_state, stats, dt = self._watchdog_apply(batch)
+                break
+            except (StepTimeout, jax.errors.JaxRuntimeError) as e:
+                self.retries += 1
+                log.warning("batch %d attempt %d failed: %s",
+                            step, attempt, e)
+                if attempt == self.max_retries:
+                    # Publish a last checkpoint for the restart, then
+                    # hand the failure to the scheduler.
+                    self._save(blocking=True)
+                    raise
+        self.state = new_state
+        self.lat.append(dt)
+
+        # Applied-events accounting (matches the serving-rate contract:
+        # work done, not traffic offered).
+        ins_offered = int((np.asarray(batch.ins_u) < n).sum())
+        del_offered = int((np.asarray(batch.del_u) < n).sum())
+        overflow = int(stats["overflow"])
+        del_found = int(stats.get("deletes_found", 0))
+        self.applied += (ins_offered - overflow) + del_found
+        self.dropped_overflow += overflow
+        self.dropped_unmatched += del_offered - del_found
+
+        if self._ewma is None:
+            self._ewma = dt
+        if dt > self.straggler_factor * self._ewma:
+            self.stragglers.append((step, dt, self._ewma))
+        self._ewma = 0.9 * self._ewma + 0.1 * dt
+
+        if self.tour_mode != "off" and (step + 1) % self.tour_every == 0:
+            t0 = time.perf_counter()
+            self.tn, self.state = refresh_tour(
+                self.state, self.tn,
+                incremental=(self.tour_mode == "incremental"),
+                use_kernel=self.use_kernel)
+            jax.block_until_ready(self.tn.pre)
+            self.tour_lat.append(time.perf_counter() - t0)
+        if self.bcc_mode != "off" and (step + 1) % self.tour_every == 0:
+            t0 = time.perf_counter()
+            self.bcc = refresh_bcc(
+                self.state, self.bcc, tour=self.tn,
+                incremental=(self.bcc_mode == "incremental"),
+                use_kernel=self.use_kernel)
+            jax.block_until_ready(self.bcc.edge_bcc)
+            self.bcc_lat.append(time.perf_counter() - t0)
+
+        if self.audit_every and (step + 1) % self.audit_every == 0:
+            self._recover(step)
+
+        self.cursor = step + 1
+        if self.ckpt_every and (step + 1) % self.ckpt_every == 0:
+            self._save()
+        return stats, dt
+
+    def run(self, batches, *, on_batch=None):
+        """Drive every batch from the current cursor; returns the state.
+
+        With auditing enabled a final recover runs after the last batch
+        (a fault injected after the last cadenced audit must not leak
+        out of the loop).
+        """
+        for step in range(self.cursor, len(batches)):
+            stats, dt = self.step(step, batches[step])
+            if on_batch:
+                on_batch(step, stats, dt)
+        if self.audit_every or self.chaos:
+            self._recover(len(batches))
+        if self._writer is not None:
+            self._writer.join()
+            self._writer = None
+        return self.state
+
+    def audit_now(self):
+        """One out-of-cadence audit (no repair); returns the report."""
+        report = audit_forest(self.state, self.tn, self.bcc)
+        self.last_report = report
+        return report

@@ -12,6 +12,15 @@ call each), refresh the Euler-tour numbering at ``--tour-every`` cadence
 at the same cadence (``--bcc incremental|full``, DESIGN.md §10), and
 report sustained updates/sec plus batch latency percentiles.
 
+Since the self-healing PR the loop itself is
+``repro.launch.resilient.ResilientStreamLoop`` (DESIGN.md §11): batches
+apply under a watchdog with retry, ``--audit-every k`` runs the
+O(log n)-sync invariant audit (with scoped repair on violation),
+``--chaos`` injects deterministic seeded faults to exercise that path,
+``--sanitize`` quarantines malformed events in front of the forest, and
+``--ckpt-dir/--ckpt-every/--resume`` give the loop crash recovery with
+replay-exact resume (the stream cursor rides the checkpoint manifest).
+
 The sustained rate counts *applied* updates only: insertions dropped by
 pool overflow and deletions that matched no live edge are excluded (and
 reported on a separate dropped-events line when nonzero) — the rate
@@ -45,9 +54,9 @@ def canonical_partition(rep: np.ndarray) -> np.ndarray:
     return order[inverse]
 
 
-def main() -> None:
+def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
-        description="batch-dynamic RST serving loop (DESIGN.md §9–§10)")
+        description="batch-dynamic RST serving loop (DESIGN.md §9–§11)")
     ap.add_argument("--graph", default="grid_64",
                     help="data.graphs.SUITE name")
     ap.add_argument("--stream", default="churn",
@@ -69,14 +78,31 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--validate", action="store_true",
                     help="oracle-check the final forest")
-    args = ap.parse_args()
+    ap.add_argument("--audit-every", type=int, default=0,
+                    help="audit invariants every k batches and run the "
+                         "repair ladder on violation (DESIGN.md §11)")
+    ap.add_argument("--chaos", default="",
+                    help="comma-separated dynamic.chaos injector names, "
+                         "or 'all' (deterministic fault injection)")
+    ap.add_argument("--chaos-every", type=int, default=8,
+                    help="inject one fault every k batches")
+    ap.add_argument("--chaos-seed", type=int, default=0)
+    ap.add_argument("--sanitize", action="store_true",
+                    help="quarantine malformed events before apply")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="checkpoint directory (enables crash recovery)")
+    ap.add_argument("--ckpt-every", type=int, default=0,
+                    help="checkpoint every k batches")
+    ap.add_argument("--resume", action="store_true",
+                    help="resume from the newest checkpoint in --ckpt-dir")
+    args = ap.parse_args(argv)
 
     import jax
 
     from repro.data.graphs import SUITE
     from repro.data.streams import STREAMS
-    from repro.dynamic import (init_state, refresh_bcc, refresh_tour,
-                               replay_batch)
+    from repro.dynamic.chaos import INJECTORS
+    from repro.launch.resilient import ResilientStreamLoop
 
     factory, kwargs, regime = SUITE[args.graph]
     g = factory(**kwargs)
@@ -89,79 +115,99 @@ def main() -> None:
     stream = STREAMS[args.stream](g, **stream_kwargs)
     batches = stream.batches[:args.steps]
 
+    chaos = ()
+    if args.chaos:
+        chaos = (tuple(INJECTORS) if args.chaos == "all"
+                 else tuple(args.chaos.split(",")))
+        for name in chaos:
+            if name not in INJECTORS:
+                ap.error(f"unknown injector {name!r} "
+                         f"(have: {', '.join(INJECTORS)})")
+
     print(f"graph {args.graph} ({regime}): V={n} E={g.n_edges}; "
           f"stream {args.stream}, batch={args.batch}, "
-          f"{len(batches)} batches, tour={args.tour}, bcc={args.bcc}")
+          f"{len(batches)} batches, tour={args.tour}, bcc={args.bcc}"
+          + (f", chaos={','.join(chaos)}@{args.chaos_every}" if chaos
+             else "")
+          + (f", audit@{args.audit_every}" if args.audit_every else ""))
 
-    state = init_state(stream)
+    loop = ResilientStreamLoop.from_stream(
+        stream,
+        tour_mode=args.tour, bcc_mode=args.bcc, tour_every=args.tour_every,
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        audit_every=args.audit_every, chaos=chaos,
+        chaos_every=args.chaos_every, chaos_seed=args.chaos_seed,
+        sanitize=args.sanitize)
+    if args.resume:
+        start = loop.resume()
+        if start:
+            print(f"resumed from checkpoint at batch {start}")
+
     # Warm the jits on the first batch shapes (not timed).
-    if batches:
-        warm, _ = replay_batch(state, batches[0])
+    if batches and loop.cursor < len(batches):
+        from repro.dynamic import replay_batch
+        warm, _ = replay_batch(loop.state, batches[loop.cursor])
         jax.block_until_ready(warm.parent)
 
-    tn = None
-    bcc = None
-    applied = 0
-    dropped_overflow = 0
-    dropped_unmatched = 0
-    lat, tour_lat, bcc_lat = [], [], []
-    t_loop = time.perf_counter()
-    for step, b in enumerate(batches):
-        t0 = time.perf_counter()
-        state, stats = replay_batch(state, b)
-        jax.block_until_ready(state.parent)
-        lat.append(time.perf_counter() - t0)
-        # Applied updates only: offered insertions minus pool overflow,
-        # plus deletions that actually matched a live pool slot.
-        ins_offered = int((b.ins_u < n).sum())
-        del_offered = int((b.del_u < n).sum())
-        overflow = int(stats["overflow"])
-        del_found = int(stats["deletes_found"])
-        applied += (ins_offered - overflow) + del_found
-        dropped_overflow += overflow
-        dropped_unmatched += del_offered - del_found
-        if args.tour != "off" and (step + 1) % args.tour_every == 0:
-            t0 = time.perf_counter()
-            tn, state = refresh_tour(
-                state, tn, incremental=(args.tour == "incremental"))
-            jax.block_until_ready(tn.pre)
-            tour_lat.append(time.perf_counter() - t0)
-        if args.bcc != "off" and (step + 1) % args.tour_every == 0:
-            t0 = time.perf_counter()
-            bcc = refresh_bcc(state, bcc, tour=tn,
-                              incremental=(args.bcc == "incremental"))
-            jax.block_until_ready(bcc.edge_bcc)
-            bcc_lat.append(time.perf_counter() - t0)
+    def on_batch(step, stats, dt):
         if step < 3 or (step + 1) % 8 == 0:
-            line = (f"  batch {step:3d}: {lat[-1]*1e3:6.1f} ms  "
+            line = (f"  batch {step:3d}: {dt*1e3:6.1f} ms  "
                     f"cuts={int(stats['cuts'])} links={int(stats['links'])} "
                     f"rounds={int(stats['rounds'])} "
-                    f"components={int(state.n_components)}")
-            if bcc is not None:
-                line += (f" n_bcc={int(bcc.n_bcc)} "
-                         f"bridges={int(bcc.n_bridges)}")
+                    f"components={int(loop.state.n_components)}")
+            if loop.bcc is not None:
+                line += (f" n_bcc={int(loop.bcc.n_bcc)} "
+                         f"bridges={int(loop.bcc.n_bridges)}")
             print(line)
+
+    t_loop = time.perf_counter()
+    state = loop.run(batches, on_batch=on_batch)
     elapsed = time.perf_counter() - t_loop
 
-    lat_ms = np.asarray(lat) * 1e3
-    print(f"\nsustained: {applied / max(elapsed, 1e-9):,.0f} updates/sec "
-          f"({applied} applied events / {elapsed:.2f} s)")
-    dropped = dropped_overflow + dropped_unmatched
-    if dropped:
-        print(f"dropped: {dropped} events excluded from the rate "
-              f"(pool overflow={dropped_overflow}, "
-              f"unmatched deletes={dropped_unmatched})")
-    print(f"batch latency: p50 {np.percentile(lat_ms, 50):.1f} ms, "
-          f"p95 {np.percentile(lat_ms, 95):.1f} ms")
-    if tour_lat:
-        print(f"tour refresh ({args.tour}): median "
-              f"{np.median(tour_lat)*1e3:.1f} ms over {len(tour_lat)} calls")
-    if bcc_lat:
-        print(f"bcc refresh ({args.bcc}): median "
-              f"{np.median(bcc_lat)*1e3:.1f} ms over {len(bcc_lat)} calls; "
-              f"final n_bcc={int(bcc.n_bcc)} "
-              f"bridges={int(bcc.n_bridges)} "
-              f"articulation={int(bcc.n_articulation)}")
+    if not loop.lat:
+        print("\nno batches applied (empty stream or --steps 0); "
+              "nothing to report")
+    else:
+        lat_ms = np.asarray(loop.lat) * 1e3
+        print(f"\nsustained: {loop.applied / max(elapsed, 1e-9):,.0f} "
+              f"updates/sec ({loop.applied} applied events / "
+              f"{elapsed:.2f} s)")
+        dropped = loop.dropped_overflow + loop.dropped_unmatched
+        if dropped:
+            print(f"dropped: {dropped} events excluded from the rate "
+                  f"(pool overflow={loop.dropped_overflow}, "
+                  f"unmatched deletes={loop.dropped_unmatched})")
+        print(f"batch latency: p50 {np.percentile(lat_ms, 50):.1f} ms, "
+              f"p95 {np.percentile(lat_ms, 95):.1f} ms")
+        if loop.tour_lat:
+            print(f"tour refresh ({args.tour}): median "
+                  f"{np.median(loop.tour_lat)*1e3:.1f} ms over "
+                  f"{len(loop.tour_lat)} calls")
+        if loop.bcc_lat:
+            print(f"bcc refresh ({args.bcc}): median "
+                  f"{np.median(loop.bcc_lat)*1e3:.1f} ms over "
+                  f"{len(loop.bcc_lat)} calls; "
+                  f"final n_bcc={int(loop.bcc.n_bcc)} "
+                  f"bridges={int(loop.bcc.n_bridges)} "
+                  f"articulation={int(loop.bcc.n_articulation)}")
+    if loop.quarantine:
+        total = sum(loop.quarantine.values())
+        cats = ", ".join(f"{k}={v}" for k, v in
+                         sorted(loop.quarantine.items()) if v)
+        print(f"quarantined: {total} malformed events rejected by the "
+              f"sanitizer ({cats})" if total else
+              "quarantined: 0 malformed events")
+    if chaos or args.audit_every:
+        n_rec = len(loop.recoveries)
+        modes = {}
+        for _, info in loop.recoveries:
+            modes[info["mode"]] = modes.get(info["mode"], 0) + 1
+        print(f"chaos: {len(loop.injected)} faults injected; "
+              f"recoveries: {n_rec}"
+              + (f" ({', '.join(f'{k}={v}' for k, v in sorted(modes.items()))})"
+                 if n_rec else ""))
+        if loop.last_report is not None:
+            print(f"final audit: {loop.last_report.summary()}")
 
     if args.validate:
         from repro.core.compress import roots_of
@@ -179,6 +225,8 @@ def main() -> None:
                                    canonical_partition(rep_s)))
         print(f"validate: forest {v}, partition==from-scratch: {same} "
               f"(all {n} vertices)")
+        if not (v["all_ok"] and same):
+            raise SystemExit("validate: FAILED")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,336 @@
+"""Self-healing layer (DESIGN.md §11): chaos soak across every injector,
+audit detection, scoped-repair/rebuild oracle agreement (networkx-checked),
+sanitizer quarantine, polluted-stream serving, kill+resume bit-identity,
+and the serve_stream --steps 0 regression."""
+import numpy as np
+import pytest
+
+from repro.core.connectivity import connected_components
+from repro.data import graphs as G
+from repro.data.streams import STREAMS
+from repro.dynamic import (INJECTORS, audit_forest, init_state, inject,
+                           live_graph, merge_quarantine, pollute_stream,
+                           rebuild_forest, recover, refresh_bcc,
+                           refresh_tour, repair_forest, replay_batch,
+                           sanitize_batch)
+from repro.launch.resilient import ResilientStreamLoop
+
+#: injector → does it corrupt forest structure (vs a cache snapshot)?
+_STRUCTURAL = {name: name != "stale_bcc" for name in INJECTORS}
+
+
+def _canon(rep):
+    rep = np.asarray(rep)
+    _, first, inverse = np.unique(rep, return_index=True,
+                                  return_inverse=True)
+    return np.argsort(np.argsort(first))[inverse]
+
+
+def _nx_graph(lg):
+    # MultiGraph: streams can re-insert a live edge, and a doubled edge
+    # is a cycle (never a bridge) — a simple Graph would collapse it.
+    nx = pytest.importorskip("networkx")
+    nxg = nx.MultiGraph()
+    nxg.add_nodes_from(range(lg.n_nodes))
+    # live_graph symmetrizes (both directions); one slot = first half.
+    src = np.asarray(lg.src)[: len(lg.src) // 2]
+    dst = np.asarray(lg.dst)[: len(lg.dst) // 2]
+    real = (src < lg.n_nodes) & (dst < lg.n_nodes)
+    nxg.add_edges_from((int(u), int(v)) for u, v, ok in
+                       zip(src, dst, real) if ok and u != v)
+    return nx, nxg
+
+
+def _assert_matches_oracles(state, tn, bcc, tag):
+    """Forest partition + BCC masks match networkx AND from-scratch."""
+    lg = live_graph(state)
+    nx, nxg = _nx_graph(lg)
+
+    # Partition: rep vs networkx connected components vs GConn rebuild.
+    labels = np.full(lg.n_nodes, -1)
+    for i, comp in enumerate(nx.connected_components(nxg)):
+        for v in comp:
+            labels[v] = i
+    assert np.array_equal(_canon(state.rep), _canon(labels)), tag
+    rep_scratch, _, _ = connected_components(lg)
+    assert np.array_equal(_canon(state.rep), _canon(rep_scratch)), tag
+
+    if bcc is None:
+        return
+    # BCC: healed cache must equal a from-scratch recompute on the same
+    # state bit-for-bit, and match networkx on the live graph.
+    full = refresh_bcc(state, None, tour=tn, incremental=False)
+    for f in ("articulation", "bridge", "n_bcc", "n_bridges"):
+        assert np.array_equal(np.asarray(getattr(bcc, f)),
+                              np.asarray(getattr(full, f))), (tag, f)
+    assert np.array_equal(_canon(bcc.edge_bcc), _canon(full.edge_bcc)), tag
+    art = {v for v in range(lg.n_nodes)
+           if bool(np.asarray(bcc.articulation)[v])}
+    assert art == set(nx.articulation_points(nxg)), tag
+    n = state.n_nodes
+    bridge = np.asarray(bcc.bridge)
+    src = np.asarray(state.pool_src)
+    dst = np.asarray(state.pool_dst)
+    got = {frozenset((int(u), int(v))) for u, v, e in zip(src, dst, bridge)
+           if e and u < n and v < n}
+    assert got == {frozenset((int(u), int(v)))
+                   for u, v in nx.bridges(nxg)}, tag
+
+
+@pytest.fixture(scope="module")
+def steady():
+    """One churn steady state (multi-component, with live caches)."""
+    g = G.grid2d(16)
+    stream = STREAMS["churn"](g, batch=32, n_batches=8, seed=0)
+    state = init_state(stream)
+    for b in stream.batches:
+        state, _ = replay_batch(state, b)
+    tn, state = refresh_tour(state, None)
+    bcc = refresh_bcc(state, None, tour=tn)
+    report = audit_forest(state, tn, bcc)
+    assert bool(report.healthy), "steady-state fixture must start healthy"
+    return state, tn, bcc
+
+
+@pytest.mark.parametrize("injector", sorted(INJECTORS))
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_inject_detect_recover_oracle(steady, injector, seed):
+    """Every injector × seed: the audit detects the fault, the recovery
+    ladder restores the forest, and the result matches the oracles."""
+    state, tn, bcc = steady
+    bad, bad_bcc, desc = inject(injector, state, bcc, seed=seed)
+    report = audit_forest(bad, tn, bad_bcc)
+    assert not bool(report.healthy), (injector, seed, desc)
+    if _STRUCTURAL[injector]:
+        assert not bool(report.forest_ok), (injector, seed, desc)
+    else:
+        assert bool(report.forest_ok), (injector, seed, desc)
+        assert not bool(report.bcc_fresh), (injector, seed, desc)
+
+    fixed, tn2, bcc2, _, info = recover(bad, tn, bad_bcc)
+    assert bool(audit_forest(fixed, tn2, bcc2).healthy), (injector, seed)
+    expect = ("scoped", "full") if _STRUCTURAL[injector] else ("refresh",)
+    assert info["mode"] in expect, (injector, seed, info)
+    _assert_matches_oracles(fixed, tn2, bcc2, (injector, seed))
+
+
+def test_scoped_repair_matches_rebuild(steady):
+    """repair_forest and rebuild_forest converge to the same partition,
+    and both pass a fresh audit."""
+    state, _, bcc = steady
+    for injector in ("parent_bitflip", "parent_cycle", "tree_mask_desync",
+                     "pool_desync"):
+        bad, _, _ = inject(injector, state, bcc, seed=7)
+        report = audit_forest(bad)
+        assert not bool(report.forest_ok), injector
+        fixed, rstats = repair_forest(bad, report)
+        rebuilt, bstats = rebuild_forest(bad)
+        assert bool(audit_forest(fixed).forest_ok), injector
+        assert bool(audit_forest(rebuilt).forest_ok), injector
+        assert np.array_equal(_canon(fixed.rep), _canon(rebuilt.rep)), \
+            injector
+        assert int(rstats["sync_total"]) > 0
+        assert int(bstats["sync_total"]) > 0
+
+
+def test_recover_escalates_on_forged_odd_cycle(steady):
+    """An odd parent cycle whose every link carries a forged tree bit
+    evades the sever cut set (cover stays consistent, no self-fixed
+    point) — recover must detect non-viability and escalate straight to
+    the full rebuild instead of running the scoped path."""
+    import dataclasses
+
+    state, _, _ = steady
+    n = state.n_nodes
+    parent = np.asarray(state.parent).copy()
+    src = np.asarray(state.pool_src)
+    dst = np.asarray(state.pool_dst)
+    valid = np.asarray(state.pool_valid)
+    tree = np.asarray(state.tree_mask).copy()
+
+    # Find a live path u - v - w and close it into a 3-cycle by forging
+    # the w→u link onto a sacrificial live non-tree slot (all three
+    # links end up tree-backed with a consistent cover).
+    slot_of = {}
+    for i, (a, b, ok) in enumerate(zip(src, dst, valid)):
+        if ok:
+            slot_of[(int(a), int(b))] = i
+            slot_of[(int(b), int(a))] = i
+    spare = np.flatnonzero(valid & ~tree)
+    tri = None
+    for (u, v), s1 in slot_of.items():
+        if parent[u] != v:
+            continue
+        w = int(parent[v])
+        if w in (u, v) or (v, w) not in slot_of:
+            continue
+        s2 = slot_of[(v, w)]
+        forged = next((int(s) for s in spare if s not in (s1, s2)), None)
+        if forged is None:
+            continue
+        tri = (u, v, w, s1, s2, forged)
+        break
+    assert tri is not None, "fixture lacks a forgeable path"
+    u, v, w, s1, s2, forged = tri
+    parent[w] = u                               # close the cycle
+    src2, dst2 = src.copy(), dst.copy()
+    src2[forged], dst2[forged] = w, u           # forge the closing edge
+    tree[[s1, s2, forged]] = True
+    bad = dataclasses.replace(
+        state, parent=np.asarray(parent, np.int32),
+        pool_src=src2, pool_dst=dst2, tree_mask=tree)
+
+    report = audit_forest(bad)
+    assert not bool(report.forest_ok)
+    fixed, _, _, _, info = recover(bad)
+    assert info["mode"] == "full", info
+    assert bool(audit_forest(fixed).forest_ok)
+
+
+def test_sanitizer_counters_and_safety():
+    """sanitize_batch classifies malformed events per category, rewrites
+    them to padding, and the sanitized batch applies cleanly."""
+    from repro.data.streams import StreamBatch
+
+    g = G.grid2d(8)
+    stream = STREAMS["insert_heavy"](g, batch=16, seed=0)
+    state = init_state(stream)
+    n = g.n_nodes
+    b = stream.batches[0]
+    ins_u = np.asarray(b.ins_u).copy()
+    ins_v = np.asarray(b.ins_v).copy()
+    del_u = np.asarray(b.del_u).copy()
+    del_v = np.asarray(b.del_v).copy()
+    ins_u[0] = n + 7                            # out of range (not sentinel)
+    ins_u[1] = ins_v[1] = 3                     # self-loop
+    del_u[0], del_v[0] = -2, 5                  # negative endpoint
+    dirty = StreamBatch(ins_u=ins_u, ins_v=ins_v, del_u=del_u, del_v=del_v)
+
+    clean, q = sanitize_batch(dirty, n)
+    assert q["ins_out_of_range"] == 1
+    assert q["ins_self_loop"] == 1
+    assert q["del_out_of_range"] == 1
+    assert q["del_self_loop"] == 0
+    cu = np.asarray(clean.ins_u)
+    cv = np.asarray(clean.ins_v)
+    assert cu[0] == n and cv[0] == n and cu[1] == n and cv[1] == n
+
+    total = merge_quarantine({}, q)
+    total = merge_quarantine(total, q)
+    assert total["ins_out_of_range"] == 2
+
+    state, _ = replay_batch(state, clean)
+    assert bool(audit_forest(state).forest_ok)
+
+
+def test_polluted_stream_served_with_sanitizer():
+    """A stream hit by every polluter serves cleanly behind the
+    sanitizer: events are quarantined, invariants hold, and the final
+    partition matches the oracles."""
+    g = G.grid2d(8)
+    stream = STREAMS["churn"](g, batch=16, n_batches=6, seed=3)
+    polluted = pollute_stream(
+        stream, ["out_of_range", "self_loops", "phantom_deletes"], seed=3)
+    loop = ResilientStreamLoop.from_stream(
+        polluted, tour_mode="incremental", bcc_mode="incremental",
+        tour_every=2, audit_every=2, sanitize=True)
+    state = loop.run(list(polluted.batches))
+    assert sum(loop.quarantine.values()) > 0
+    assert loop.quarantine.get("ins_out_of_range", 0) > 0
+    assert bool(audit_forest(state, loop.tn, loop.bcc).healthy)
+    _assert_matches_oracles(state, loop.tn, loop.bcc, "polluted")
+
+
+def test_chaos_serving_loop_recovers():
+    """End-to-end: chaos on a cadence, audits repair the damage, and the
+    final state passes the audit and the oracles."""
+    g = G.grid2d(8)
+    stream = STREAMS["churn"](g, batch=16, n_batches=8, seed=1)
+    loop = ResilientStreamLoop.from_stream(
+        stream, tour_mode="incremental", bcc_mode="incremental",
+        tour_every=2, audit_every=2, chaos=("parent_cycle", "pool_desync"),
+        chaos_every=3, chaos_seed=5)
+    state = loop.run(list(stream.batches))
+    assert len(loop.injected) >= 2
+    assert len(loop.recoveries) >= 1
+    assert bool(audit_forest(state, loop.tn, loop.bcc).healthy)
+    _assert_matches_oracles(state, loop.tn, loop.bcc, "chaos loop")
+
+
+def test_kill_resume_bit_identical(tmp_path):
+    """A run killed mid-stream and resumed from its checkpoint converges
+    to a final state bit-identical to the uninterrupted run — with chaos
+    injection and audits active (seeds derive from (chaos_seed, step))."""
+    g = G.grid2d(8)
+    stream = STREAMS["churn"](g, batch=16, n_batches=12, seed=2)
+    batches = list(stream.batches)
+    config = dict(tour_mode="incremental", bcc_mode="incremental",
+                  tour_every=4, audit_every=4,
+                  chaos=("parent_cycle", "pool_desync"), chaos_every=3,
+                  chaos_seed=9, async_ckpt=False)
+
+    a = ResilientStreamLoop.from_stream(stream, **config)
+    state_a = a.run(batches)
+
+    b1 = ResilientStreamLoop.from_stream(
+        stream, ckpt_dir=tmp_path / "ck", ckpt_every=4, **config)
+    b1.run(batches[:8])                         # "killed" after batch 8
+    b2 = ResilientStreamLoop.from_stream(
+        stream, ckpt_dir=tmp_path / "ck", ckpt_every=4, **config)
+    assert b2.resume() == 8
+    state_b = b2.run(batches)
+    assert [s for s, _ in b2.injected] == \
+        [s for s, _ in a.injected if s >= 8]
+
+    for f in ("parent", "rep", "pool_src", "pool_dst", "pool_valid",
+              "tree_mask", "dirty"):
+        assert np.array_equal(np.asarray(getattr(state_a, f)),
+                              np.asarray(getattr(state_b, f))), f
+    for f in ("pre", "size", "last", "comp"):
+        assert np.array_equal(np.asarray(getattr(a.tn, f)),
+                              np.asarray(getattr(b2.tn, f))), f
+    assert np.array_equal(np.asarray(a.bcc.edge_bcc),
+                          np.asarray(b2.bcc.edge_bcc))
+    assert np.array_equal(np.asarray(a.bcc.bridge),
+                          np.asarray(b2.bcc.bridge))
+
+
+def test_serve_stream_zero_steps(capsys):
+    """--steps 0 must report an empty run, not crash on percentiles."""
+    from repro.launch import serve_stream
+
+    serve_stream.main(["--graph", "chain_4k", "--stream", "churn",
+                       "--batch", "16", "--steps", "0", "--tour", "off"])
+    out = capsys.readouterr().out
+    assert "no batches applied" in out
+
+
+def test_audit_spanning_check(steady):
+    """A live non-tree edge bridging two components (a redirect the
+    tree-slot checks can't see) must fail the spanning verdict."""
+    import dataclasses
+
+    state, _, _ = steady
+    rep = np.asarray(state.rep)
+    src = np.asarray(state.pool_src).copy()
+    dst = np.asarray(state.pool_dst).copy()
+    valid = np.asarray(state.pool_valid)
+    tree = np.asarray(state.tree_mask)
+    roots = np.unique(rep)
+    assert roots.size >= 2, "steady churn state should be multi-component"
+    cand = np.flatnonzero(valid & ~tree)
+    assert cand.size, "need a live non-tree slot to redirect"
+    s = int(cand[0])
+    other = roots[roots != rep[src[s]]][0]
+    dst[s] = other                              # now bridges two comps
+    bad = dataclasses.replace(state, pool_src=src, pool_dst=dst)
+    report = audit_forest(bad)
+    assert not bool(report.spanning_ok)
+    assert not bool(report.forest_ok)
+    fixed, _, _, _, info = recover(bad)
+    assert bool(audit_forest(fixed).forest_ok)
+    # The bridging edge is real connectivity: repaired partition must
+    # treat the two claimed components as one.
+    assert np.array_equal(
+        _canon(fixed.rep),
+        _canon(np.asarray(connected_components(live_graph(fixed))[0])))

@@ -1,12 +1,16 @@
 """Checkpoint save/restore, atomicity, retention, elastic restore, and the
-fault-tolerant loop (resume + straggler log)."""
+fault-tolerant loop (resume + straggler log, and driving the dynamic
+forest: retry soundness + kill/resume bit-identity, DESIGN.md §11)."""
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
+from repro.data import graphs as G
+from repro.data.streams import STREAMS
+from repro.dynamic import init_state, replay_batch
 from repro.train import checkpoint as ckpt
-from repro.train.fault import FaultTolerantLoop
+from repro.train.fault import FaultTolerantLoop, StepTimeout
 
 
 def _state(seed=0):
@@ -116,3 +120,118 @@ def test_straggler_detection(tmp_path):
     loop.run(8)
     assert len(loop.stragglers) >= 1
     assert loop.stragglers[0][0] == 4      # 0-indexed step of the slow call
+
+
+# ---------------------------------------------------------------------------
+# FaultTolerantLoop driving the dynamic forest (DESIGN.md §11): steps are
+# pure functions of (state, batch), so retrying after an injected timeout
+# and resuming from a checkpoint must both land on the bit-identical forest.
+
+_FOREST_FIELDS = ("parent", "rep", "pool_src", "pool_dst", "pool_valid",
+                  "tree_mask", "dirty")
+
+
+def _forest_stream(n_batches=12):
+    stream = STREAMS["churn"](G.grid2d(8), batch=16, n_batches=n_batches,
+                              seed=5)
+    return init_state(stream), stream.batches
+
+
+def _forest_step(state, batch):
+    state, stats = replay_batch(state, batch)
+    return state, {"deletes_found": stats["deletes_found"]}
+
+
+def _assert_forests_equal(a, b):
+    for f in _FOREST_FIELDS:
+        np.testing.assert_array_equal(np.asarray(getattr(a, f)),
+                                      np.asarray(getattr(b, f)), err_msg=f)
+
+
+def test_fault_loop_forest_retry_sound(tmp_path):
+    """Injected StepTimeouts are retried; the forest matches a clean run."""
+    state0, batches = _forest_stream()
+    ref = state0
+    for b in batches:
+        ref, _ = _forest_step(ref, b)
+
+    fail_left = {3: 1, 7: 2}               # step -> failing attempts
+    attempts = {}
+
+    def flaky(state, batch):
+        i = attempts["cursor"]
+        attempts[i] = attempts.get(i, 0) + 1
+        if fail_left.get(i, 0) >= attempts[i]:
+            raise StepTimeout(f"injected at step {i}")
+        return _forest_step(state, batch)
+
+    def data():
+        for c, b in enumerate(batches):
+            attempts["cursor"] = c
+            yield c, b
+
+    loop = FaultTolerantLoop(step_fn=flaky, state=state0, data_iter=data(),
+                             ckpt_dir=tmp_path, ckpt_every=4, max_retries=2,
+                             async_ckpt=False)
+    loop.run(len(batches))
+    assert loop.retries == 3
+    _assert_forests_equal(loop.state, ref)
+
+
+def test_fault_loop_forest_final_failure_checkpoints(tmp_path):
+    """Retries exhausted -> last good forest is published, then re-raise."""
+    state0, batches = _forest_stream()
+
+    def doomed(state, batch):
+        if attempts["cursor"] == 2:
+            raise StepTimeout("injected permanent fault")
+        return _forest_step(state, batch)
+
+    attempts = {}
+
+    def data():
+        for c, b in enumerate(batches):
+            attempts["cursor"] = c
+            yield c, b
+
+    loop = FaultTolerantLoop(step_fn=doomed, state=state0, data_iter=data(),
+                             ckpt_dir=tmp_path, ckpt_every=100,
+                             max_retries=1, async_ckpt=False)
+    with pytest.raises(StepTimeout):
+        loop.run(len(batches))
+    assert loop.retries == 2               # max_retries + 1 attempts
+    # The emergency checkpoint holds the last good (step-2) forest.
+    assert ckpt.latest_step(tmp_path) == 2
+    restored, manifest = ckpt.restore(tmp_path, state0)
+    assert manifest["data_cursor"] == 2
+    _assert_forests_equal(restored, loop.state)
+
+
+def test_fault_loop_forest_kill_resume_identical(tmp_path):
+    """Kill after 6 steps, resume from the step-4 checkpoint, replay the
+    cursor — the final forest is bit-identical to an uninterrupted run."""
+    state0, batches = _forest_stream()
+
+    def data(start=0):
+        for c, b in enumerate(batches):
+            if c >= start:
+                yield c, b
+
+    ref = FaultTolerantLoop(step_fn=_forest_step, state=state0,
+                            data_iter=data(), ckpt_dir=tmp_path / "ref",
+                            ckpt_every=4, async_ckpt=False)
+    ref.run(len(batches))
+
+    dead = FaultTolerantLoop(step_fn=_forest_step, state=state0,
+                             data_iter=data(), ckpt_dir=tmp_path / "b",
+                             ckpt_every=4, async_ckpt=False)
+    dead.run(6)                            # "killed": ckpt exists at step 4
+
+    heir = FaultTolerantLoop(step_fn=_forest_step, state=state0,
+                             data_iter=None, ckpt_dir=tmp_path / "b",
+                             ckpt_every=4, async_ckpt=False)
+    start = heir.resume()
+    assert start == 4
+    heir.data_iter = data(start)           # replay-exact cursor
+    heir.run(len(batches))
+    _assert_forests_equal(heir.state, ref.state)
