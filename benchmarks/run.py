@@ -13,6 +13,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
                       dynamic pool, with sync/round counts (DESIGN.md §10)
   table6_robustness/* self-healing cost: audit syncs, scoped repair vs
                       full rebuild on injected faults (DESIGN.md §11)
+  table7_queries/*    batched tree-query serving: amortized QueryTables
+                      vs per-read-batch recompute (DESIGN.md §12)
   kernels/*           Pallas kernel micro-benchmarks (incl. compress_* engine
                       rows; interpret mode off-TPU)
   ablation_compress/* amortized vs per-hop convergence checks (engine k=5
@@ -103,7 +105,7 @@ def main(argv=None) -> None:
     from benchmarks import (ablation_hooking, fig1_runtime, fig2_depth,
                             table1_steps, table2_stats, table3_bcc,
                             table4_dynamic, table5_dynamic_bcc,
-                            table6_robustness)
+                            table6_robustness, table7_queries)
     from benchmarks.common import rows_to_records
     from repro.data import graphs as G
 
@@ -137,6 +139,7 @@ def main(argv=None) -> None:
     emit(table4_dynamic.run(suite))
     emit(table5_dynamic_bcc.run(suite))
     emit(table6_robustness.run(t6_suite))
+    emit(table7_queries.run(suite))
     emit(ablation_hooking.run(suite))
     emit(kernel_microbench(micro_n))
     emit(compress_microbench(micro_n))

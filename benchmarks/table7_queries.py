@@ -1,0 +1,102 @@
+"""Table VII (extension): amortized vs recomputed tree-query serving.
+
+The query layer's whole bet (DESIGN.md §12): build the ``QueryTables``
+index ONCE per tour refresh — one ``rank_to_root`` pass + ⌈log2 n⌉
+sync-free doubling levels — then answer every query batch until the next
+refresh with fixed-shape gathers costing zero additional engine syncs.
+This table measures that amortization against the naive alternative that
+rebuilds the tour + tables per read batch, for a read-heavy and a
+write-heavy interleave:
+
+  table7_queries/{graph}/{scenario}/amortized
+      one ``build_tables`` + R mixed read batches (lca / connected /
+      subtree add / path min over Q random pairs); reported per batch
+  table7_queries/{graph}/{scenario}/recompute
+      per read batch: full ``tour_numbering`` + ``build_tables`` + the
+      same mixed bundle
+
+scenario: read_heavy = 8 read batches between refreshes, write_heavy = 1.
+
+derived: ``sync_per_read`` — engine syncs charged per read batch
+(amortized: build_syncs / R, then 0 for the queries themselves;
+recompute: the full build_syncs every batch, and that *excludes* the
+tour's list-ranking syncs, so it is a lower bound that already loses).
+``scripts/bench_smoke.sh`` asserts amortized < recompute on the
+read_heavy rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, time_fn
+from repro.core.euler import tour_numbering
+from repro.core.queries import (build_tables, connected, lca, path_agg,
+                                subtree_agg)
+from repro.data.graphs import build_suite
+from repro.data.streams import STREAMS
+from repro.dynamic import init_state, refresh_tour, replay_batch
+
+#: read batches per refresh interval.
+SCENARIOS = {"read_heavy": 8, "write_heavy": 1}
+
+#: query pairs per read batch.
+N_QUERIES = 256
+
+
+def _bundle(tables, u, v, payload):
+    """One mixed read batch: the four op families, Q queries each."""
+    return (lca(tables, u, v), connected(tables, u, v),
+            subtree_agg(tables, u, payload, "add"),
+            path_agg(tables, u, v, payload, "min"))
+
+
+def run(suite=None) -> list[str]:
+    rows = []
+    suite = suite or build_suite(["grid_64", "rmat_14"])
+    for name, g in suite.items():
+        n = g.n_nodes
+        stream = STREAMS["churn"](g, batch=32, seed=0, n_batches=4)
+        state = init_state(stream)
+        for b in stream.batches:
+            state, _ = replay_batch(state, b)
+        tn, state = refresh_tour(state, None)
+
+        rng = np.random.default_rng(0)
+        u = jnp.asarray(rng.integers(0, n, N_QUERIES), jnp.int32)
+        v = jnp.asarray(rng.integers(0, n, N_QUERIES), jnp.int32)
+        payload = jnp.asarray(rng.integers(1, 100, n), jnp.int32)
+        build_syncs = int(build_tables(tn).build_syncs)
+
+        for scen, reads in SCENARIOS.items():
+            def amortized():
+                tables = build_tables(tn)
+                return [_bundle(tables, u, v, payload)
+                        for _ in range(reads)]
+
+            t_amort = time_fn(
+                lambda: jax.block_until_ready(amortized())) / reads
+
+            def recompute():
+                tn2 = tour_numbering(state.parent)
+                return _bundle(build_tables(tn2), u, v, payload)
+
+            t_rec = time_fn(lambda: jax.block_until_ready(recompute()))
+
+            base = f"table7_queries/{name}/{scen}"
+            rows.append(csv_row(
+                f"{base}/amortized", t_amort * 1e6,
+                f"reads_per_refresh={reads};queries={N_QUERIES};"
+                f"sync_per_read={build_syncs / reads:.2f};"
+                f"serve_syncs=0;build_syncs={build_syncs}"))
+            rows.append(csv_row(
+                f"{base}/recompute", t_rec * 1e6,
+                f"reads_per_refresh={reads};queries={N_QUERIES};"
+                f"sync_per_read={build_syncs:.2f};"
+                f"serve_syncs={build_syncs};build_syncs={build_syncs}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

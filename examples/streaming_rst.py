@@ -11,9 +11,11 @@ and the Euler-tour numbering refreshes incrementally, only for
 components a batch actually touched (DESIGN.md §9). On top of the tour,
 the biconnectivity decomposition is *maintained* the same way: bridges
 and articulation points update per batch under dirty-component scoping
-instead of being recomputed (DESIGN.md §10). The final act breaks the
-forest on purpose and lets the self-healing ladder repair it
-(DESIGN.md §11).
+instead of being recomputed (DESIGN.md §10). A ``QuerySession`` then
+*serves* the maintained forest — batched LCA / connectivity / aggregate
+reads from one cached index, version-guarded against silent staleness
+(DESIGN.md §12). The final act breaks the forest on purpose and lets
+the self-healing ladder repair it (DESIGN.md §11).
 """
 import time
 
@@ -80,6 +82,7 @@ def main() -> None:
     print(f"incremental tour == full recompute: {same}")
 
     track_biconnectivity()
+    serve_queries()
     survive_faults()
 
 
@@ -122,6 +125,56 @@ def track_biconnectivity():
                for f in ("rep", "low", "high", "articulation",
                          "bridge", "edge_bcc", "n_bcc"))
     print(f"incremental bcc == full recompute: {same}")
+
+
+def serve_queries():
+    """Read path: batched tree queries over the maintained forest.
+
+    One ``QueryTables`` index per refresh answers whole query batches —
+    LCA, connectivity, subtree/path aggregates, bridge membership —
+    with zero additional engine syncs (DESIGN.md §12). The session is
+    version-stamped: mutate the forest without refreshing and a strict
+    session refuses, while ``policy="refresh"`` recomputes on demand.
+    """
+    import jax.numpy as jnp
+
+    from repro.dynamic import QuerySession, StaleQueryError
+
+    g = grid2d(24)
+    stream = churn(g, batch=48, n_batches=8, seed=4)
+    print("\n=== query serving: churn over grid 24x24 ===")
+    state = init_state(stream)
+    for b in stream.batches[:-1]:
+        state, _ = replay_batch(state, b)
+    tn, state = refresh_tour(state, None)
+    bcc = refresh_bcc(state, None, tour=tn)
+    sess = QuerySession.from_state(state, tn, bcc, policy="strict")
+
+    rng = np.random.default_rng(0)
+    u = jnp.asarray(rng.integers(0, g.n_nodes, 8), jnp.int32)
+    v = jnp.asarray(rng.integers(0, g.n_nodes, 8), jnp.int32)
+    payload = jnp.ones(g.n_nodes, jnp.int32)
+    conn = sess.connected(state, u, v)
+    lcas = sess.lca(state, u, v)
+    hops = sess.path_agg(state, u, v, payload, "add") - 1  # nodes → edges
+    print(f"  connected: {np.asarray(conn).tolist()}")
+    print(f"  lca:       {np.asarray(lcas).tolist()}")
+    print(f"  path hops: {np.asarray(hops).tolist()}  (-1 = disconnected)")
+    print(f"  subtree sizes at lca: "
+          f"{np.asarray(sess.subtree_agg(state, lcas, payload, 'add')).tolist()}")
+
+    # Mutate without refreshing: the strict session refuses to serve a
+    # view of a forest that has moved on...
+    state, _ = replay_batch(state, stream.batches[-1])
+    try:
+        sess.connected(state, u, v)
+        raise AssertionError("stale read served")
+    except StaleQueryError as e:
+        print(f"  strict session after un-refreshed batch: raised ({e})")
+    # ...while a refresh-policy session recomputes the index on demand.
+    sess.policy = "refresh"
+    sess.connected(state, u, v)
+    print(f"  refresh policy: {sess.sync_stats()}")
 
 
 def survive_faults():

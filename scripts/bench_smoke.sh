@@ -3,12 +3,15 @@
 # microbenches, rows also written to BENCH_rst.json. Asserts the
 # biconnectivity rows (table3/*, DESIGN.md §4), the batch-dynamic rows
 # (table4_dynamic/*, §9), and the incremental-BCC rows
-# (table5_dynamic_bcc/*, §10), and the self-healing rows
-# (table6_robustness/*, §11) actually landed so the downstream layers
+# (table5_dynamic_bcc/*, §10), the self-healing rows
+# (table6_robustness/*, §11), and the query-serving rows
+# (table7_queries/*, §12) actually landed so the downstream layers
 # can't silently drop out of the perf trajectory — and asserts the
 # *sync/round counts* of the incremental BCC refresh beat the full
-# recompute on the chain-regime sliding_window rows, and of the scoped
-# fault repair beat the full rebuild on the single-fault (f1) rows.
+# recompute on the chain-regime sliding_window rows, of the scoped
+# fault repair beat the full rebuild on the single-fault (f1) rows,
+# and of the amortized query tables beat the per-read-batch recompute
+# on the read-heavy table7 rows.
 # Wall-clock on the XLA-CPU CI backend is volume-bound, so the sync
 # counts are the device-independent advantage this guard keeps honest
 # without a GPU.
@@ -31,6 +34,10 @@ if ! grep -q '"name": "table5_dynamic_bcc/' BENCH_rst.json; then
 fi
 if ! grep -q '"name": "table6_robustness/' BENCH_rst.json; then
     echo "bench_smoke: no table6_robustness/* self-healing row in BENCH_rst.json" >&2
+    exit 1
+fi
+if ! grep -q '"name": "table7_queries/' BENCH_rst.json; then
+    echo "bench_smoke: no table7_queries/* query-serving row in BENCH_rst.json" >&2
     exit 1
 fi
 
@@ -85,6 +92,33 @@ for name, rec in records.items():
 if t6_pairs == 0:
     sys.exit("bench_smoke: no f1 scoped/full table6 row pairs found "
              "to compare")
+
+# Query serving (DESIGN.md §12): on read-heavy interleaves the amortized
+# QueryTables path must charge fewer engine syncs per read batch than
+# rebuilding the index for every batch.
+def sync_per_read(rec):
+    m = re.search(r"sync_per_read=([0-9.]+)", rec["derived"])
+    assert m, f"no sync_per_read in {rec['name']}: {rec['derived']}"
+    return float(m.group(1))
+
+t7_pairs = 0
+for name, rec in records.items():
+    if not name.startswith("table7_queries/"):
+        continue
+    if "/read_heavy/" not in name or not name.endswith("/amortized"):
+        continue
+    full = records.get(name[: -len("amortized")] + "recompute")
+    assert full is not None, f"missing recompute twin for {name}"
+    sa, sr = sync_per_read(rec), sync_per_read(full)
+    if sa >= sr:
+        sys.exit(f"bench_smoke: amortized query sync count regressed: "
+                 f"{name} has sync_per_read={sa} >= recompute {sr}")
+    print(f"bench_smoke: {name}: sync_per_read {sa} < recompute {sr}")
+    t7_pairs += 1
+
+if t7_pairs == 0:
+    sys.exit("bench_smoke: no read_heavy amortized/recompute table7 row "
+             "pairs found to compare")
 EOF
 
-echo "bench_smoke: ok (table3 + table4_dynamic + table5_dynamic_bcc + table6_robustness rows present, incremental BCC and scoped-repair sync counts ahead)"
+echo "bench_smoke: ok (table3 + table4_dynamic + table5_dynamic_bcc + table6_robustness + table7_queries rows present; incremental BCC, scoped-repair, and amortized-query sync counts ahead)"

@@ -1,0 +1,6 @@
+#!/usr/bin/env sh
+# Full test sweep: tier-1 plus every test marked `slow` (the property
+# sweeps tier1.sh skips). Extra args pass through to pytest.
+set -eu
+cd "$(dirname "$0")/.."
+PYTHONPATH=src python -m pytest -q --run-slow "$@"

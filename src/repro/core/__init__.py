@@ -11,6 +11,9 @@ from repro.core.connectivity import connected_components, pointer_jump_full
 from repro.core.euler import (TourNumbering, euler_tour_root,
                               list_rank_dist_to_end, tour_numbering)
 from repro.core.pr_rst import pr_rst
+from repro.core.queries import (QueryTables, build_tables, connected,
+                                depth_of, edge_membership, is_ancestor,
+                                lca, path_agg, subtree_agg)
 from repro.core.reroot import link_components, mark_paths, reverse_and_graft
 from repro.core.rst import (METHODS, RSTResult, gconn_euler_rst,
                             rooted_spanning_tree, tree_depth)
@@ -27,4 +30,6 @@ __all__ = [
     "rank_to_root", "reduce_to_root", "roots_of", "segment_reduce",
     "segment_reduce_scoped", "wyllie_rank",
     "link_components", "mark_paths", "reverse_and_graft",
+    "QueryTables", "build_tables", "connected", "depth_of",
+    "edge_membership", "is_ancestor", "lca", "path_agg", "subtree_agg",
 ]

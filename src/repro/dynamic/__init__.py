@@ -4,7 +4,10 @@ State + update application (``forest``), incremental tour refresh
 (``tour``), incremental biconnectivity (``bcc``), and the self-healing
 layer (DESIGN.md §11): fault injection (``chaos``), O(log n) invariant
 auditing (``audit``), and the scoped-repair/rebuild ladder
-(``recovery``). Edge-stream workloads live in ``repro.data.streams``;
+(``recovery``). The read path is ``queries``: a version-stamped
+``QuerySession`` serving LCA / connectivity / aggregates / BCC
+membership from the cached tour intervals (DESIGN.md §12).
+Edge-stream workloads live in ``repro.data.streams``;
 the resilient serving loop in ``repro.launch.resilient`` /
 ``repro.launch.serve_stream``.
 """
@@ -16,6 +19,7 @@ from repro.dynamic.chaos import (INJECTORS, POLLUTERS, inject,
 from repro.dynamic.forest import (DynamicForest, apply_batch, edge_slots,
                                   forest_empty, forest_from_graph,
                                   live_graph)
+from repro.dynamic.queries import QuerySession, StaleQueryError
 from repro.dynamic.recovery import rebuild_forest, recover, repair_forest
 from repro.dynamic.replay import init_state, replay_batch, stream_capacity
 from repro.dynamic.tour import refresh_tour
@@ -24,7 +28,7 @@ __all__ = [
     "AuditReport", "DynamicBCC", "DynamicForest", "INJECTORS", "POLLUTERS",
     "apply_batch", "audit_forest", "edge_slots", "forest_empty",
     "forest_from_graph", "init_state", "inject", "live_graph",
-    "merge_quarantine", "pollute_stream", "rebuild_forest", "recover",
-    "refresh_bcc", "refresh_tour", "repair_forest", "replay_batch",
-    "sanitize_batch", "stream_capacity",
+    "merge_quarantine", "pollute_stream", "QuerySession", "rebuild_forest",
+    "recover", "refresh_bcc", "refresh_tour", "repair_forest",
+    "replay_batch", "sanitize_batch", "StaleQueryError", "stream_capacity",
 ]

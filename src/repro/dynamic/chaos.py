@@ -48,7 +48,7 @@ from repro.dynamic.forest import DynamicForest
 def _np_state(state: DynamicForest):
     return {f: np.asarray(getattr(state, f)).copy()
             for f in ("parent", "rep", "pool_src", "pool_dst",
-                      "pool_valid", "tree_mask", "dirty")}
+                      "pool_valid", "tree_mask", "dirty", "version")}
 
 
 def _mk_state(state: DynamicForest, arrs) -> DynamicForest:

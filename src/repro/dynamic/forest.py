@@ -74,6 +74,11 @@ class DynamicForest:
                   n − n_components slots set; ≤ 1 per vertex pair).
       dirty:      bool[n] — vertex's component tree changed since the last
                   tour refresh (component-closed by construction).
+      version:    int32 scalar, bumped by every structural mutation
+                  (``apply_batch``, repair, rebuild). Derived-cache
+                  consumers (``dynamic.queries.QuerySession``) stamp the
+                  version they were built against and refuse/refresh on
+                  mismatch (DESIGN.md §12).
     """
 
     n_nodes: int
@@ -84,10 +89,12 @@ class DynamicForest:
     pool_valid: jnp.ndarray
     tree_mask: jnp.ndarray
     dirty: jnp.ndarray
+    version: jnp.ndarray
 
     def tree_flatten(self):
         return ((self.parent, self.rep, self.pool_src, self.pool_dst,
-                 self.pool_valid, self.tree_mask, self.dirty), self.n_nodes)
+                 self.pool_valid, self.tree_mask, self.dirty, self.version),
+                self.n_nodes)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
@@ -115,7 +122,8 @@ def forest_empty(n_nodes: int, capacity: int) -> DynamicForest:
     return DynamicForest(
         n_nodes=n_nodes, parent=verts, rep=verts,
         pool_src=sent, pool_dst=sent, pool_valid=off, tree_mask=off,
-        dirty=jnp.zeros((n_nodes,), jnp.bool_))
+        dirty=jnp.zeros((n_nodes,), jnp.bool_),
+        version=jnp.int32(0))
 
 
 def forest_from_graph(graph: Graph, capacity: int | None = None,
@@ -166,7 +174,8 @@ def forest_from_graph(graph: Graph, capacity: int | None = None,
         pool_valid=jnp.concatenate([jnp.ones((m,), jnp.bool_),
                                     jnp.zeros((pad,), jnp.bool_)]),
         tree_mask=jnp.concatenate([tree, jnp.zeros((pad,), jnp.bool_)]),
-        dirty=jnp.zeros((n,), jnp.bool_))
+        dirty=jnp.zeros((n,), jnp.bool_),
+        version=jnp.int32(0))
 
 
 def live_graph(state: DynamicForest) -> Graph:
@@ -382,7 +391,8 @@ def apply_batch(state: DynamicForest, insert_src: jnp.ndarray,
 
     new_state = DynamicForest(
         n_nodes=n, parent=p, rep=rt, pool_src=pool_src, pool_dst=pool_dst,
-        pool_valid=pool_valid, tree_mask=tree_mask, dirty=dirty)
+        pool_valid=pool_valid, tree_mask=tree_mask, dirty=dirty,
+        version=state.version + 1)
     stats = {"cuts": n_cuts, "links": links, "rounds": rounds,
              "overflow": overflow, "pending": pending}
     return new_state, stats

@@ -149,7 +149,8 @@ def _repair(state: DynamicForest, sever: jnp.ndarray, scope: jnp.ndarray,
 
     new_state = DynamicForest(
         n_nodes=n, parent=p, rep=rt, pool_src=pool_src, pool_dst=pool_dst,
-        pool_valid=pool_valid, tree_mask=tree_mask, dirty=dirty)
+        pool_valid=pool_valid, tree_mask=tree_mask, dirty=dirty,
+        version=state.version + 1)
     stats = {"rounds": rounds, "links": links,
              "severed": jnp.sum((sever & in_range).astype(jnp.int32)),
              "repaired": jnp.sum(scope.astype(jnp.int32)),
@@ -214,7 +215,8 @@ def _rebuild(state: DynamicForest, *, use_kernel: bool = False):
     cleaned = DynamicForest(
         n_nodes=n, parent=state.parent, rep=state.rep, pool_src=pool_src,
         pool_dst=pool_dst, pool_valid=pool_valid,
-        tree_mask=jnp.zeros((cap,), jnp.bool_), dirty=state.dirty)
+        tree_mask=jnp.zeros((cap,), jnp.bool_), dirty=state.dirty,
+        version=state.version)
 
     rep, forest_mask, cc_rounds = connected_components(
         live_graph(cleaned), use_kernel=use_kernel)
@@ -240,7 +242,8 @@ def _rebuild(state: DynamicForest, *, use_kernel: bool = False):
     new_state = DynamicForest(
         n_nodes=n, parent=parent, rep=rep, pool_src=pool_src,
         pool_dst=pool_dst, pool_valid=pool_valid, tree_mask=tree_mask,
-        dirty=jnp.ones((n,), jnp.bool_))
+        dirty=jnp.ones((n,), jnp.bool_),
+        version=state.version + 1)
     stats = {"cc_rounds": cc_rounds, "rank_syncs": rank_syncs,
              "quarantined_slots": n_quarantined,
              "sync_total": cc_rounds + rank_syncs}

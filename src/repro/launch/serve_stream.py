@@ -28,6 +28,18 @@ reflects work done, not traffic offered. ``--validate`` cross-checks the
 final forest against a from-scratch build (``core.validate`` oracles)
 with a vectorized canonical-relabel partition comparison over *all*
 vertices.
+
+Since the query-layer PR the loop also serves *reads* (DESIGN.md §12):
+``--read-ratio r`` interleaves query batches (LCA / connectivity /
+aggregates / BCC membership, round-robin) so that reads are fraction r
+of all events, answered by a ``dynamic.queries.QuerySession`` that
+adopts the loop's tour/BCC caches at each refresh cadence.
+``--query-staleness`` picks the policy between refreshes: ``stale``
+(default — bounded staleness, serve the last refreshed view), ``strict``
+(skip + count read batches that would see a stale view), or ``refresh``
+(rebuild per stale read batch — the recompute ablation table7 measures).
+Read reporting: per-op latency percentiles plus the sync accounting —
+table builds and build-syncs amortized per read batch.
 """
 from __future__ import annotations
 
@@ -54,6 +66,135 @@ def canonical_partition(rep: np.ndarray) -> np.ndarray:
     return order[inverse]
 
 
+class _ReadDriver:
+    """Interleave query batches with the write loop (DESIGN.md §12).
+
+    Per write batch, accumulates fractional read *debt* so that reads
+    make up ``read_ratio`` of all events, then drains it one query batch
+    at a time: a round-robin op mix (BCC membership ops only when the
+    loop maintains biconnectivity) over seeded-random vertex ids. The
+    ``QuerySession`` adopts the loop's tour/BCC caches whenever the
+    refresh cadence lands (object identity on ``loop.tn``) and serves
+    under ``--query-staleness`` in between; sync/staleness counters are
+    accumulated across session generations for the final report.
+    """
+
+    def __init__(self, loop, args, n: int):
+        import jax.numpy as jnp
+
+        self.loop = loop
+        self.policy = args.query_staleness
+        self.read_batch = args.read_batch
+        self.per_write = (args.read_ratio / (1.0 - args.read_ratio)
+                          * args.batch / args.read_batch)
+        self.n = n
+        self.rng = np.random.default_rng(args.seed + 104729)
+        self.payload = jnp.asarray(
+            self.rng.integers(1, 100, n), jnp.int32)
+        self.debt = 0.0
+        self.sess = None
+        self.tn_seen = None
+        self.lat: dict[str, list[float]] = {}
+        self.batches = 0
+        self.skipped_stale = 0
+        self.totals = {"builds": 0, "build_syncs_total": 0,
+                       "stale_served": 0, "auto_refreshes": 0}
+
+    def _fold_stats(self):
+        if self.sess is not None:
+            for k, v in self.sess.sync_stats().items():
+                self.totals[k] += v
+
+    def _ensure_session(self):
+        from repro.dynamic.queries import QuerySession
+
+        refreshed = (self.loop.tn is not None
+                     and self.loop.tn is not self.tn_seen)
+        if self.sess is not None and not refreshed:
+            return
+        self._fold_stats()
+        try:
+            self.sess = QuerySession.from_state(
+                self.loop.state, self.loop.tn, self.loop.bcc,
+                policy=self.policy)
+        except ValueError:
+            # Loop caches don't match the live state mid-interval (e.g.
+            # first batches before the first cadence refresh): build the
+            # view from the state alone, without BCC membership ops.
+            self.sess = QuerySession.from_state(self.loop.state,
+                                                policy=self.policy)
+        self.tn_seen = self.loop.tn
+
+    def _ops(self):
+        ops = ["lca", "connected", "depth", "subtree_add", "path_add",
+               "path_min"]
+        if self.sess.bcc is not None:
+            ops += ["is_bridge", "is_articulation"]
+        return ops
+
+    def serve(self, step: int) -> None:
+        import jax
+
+        from repro.dynamic.queries import StaleQueryError
+
+        self._ensure_session()
+        self.debt += self.per_write
+        while self.debt >= 1.0:
+            self.debt -= 1.0
+            ops = self._ops()
+            op = ops[self.batches % len(ops)]
+            u = self.rng.integers(0, self.n, self.read_batch)
+            v = self.rng.integers(0, self.n, self.read_batch)
+            state = self.loop.state
+            t0 = time.perf_counter()
+            try:
+                if op == "lca":
+                    out = self.sess.lca(state, u, v)
+                elif op == "connected":
+                    out = self.sess.connected(state, u, v)
+                elif op == "depth":
+                    out = self.sess.depth(state, u)
+                elif op == "subtree_add":
+                    out = self.sess.subtree_agg(state, u, self.payload)
+                elif op == "path_add":
+                    out = self.sess.path_agg(state, u, v, self.payload)
+                elif op == "path_min":
+                    out = self.sess.path_agg(state, u, v, self.payload,
+                                             "min")
+                elif op == "is_bridge":
+                    out = self.sess.is_bridge(state, u, v)
+                else:
+                    out = self.sess.is_articulation(state, u)
+            except StaleQueryError:
+                self.skipped_stale += 1   # strict policy between refreshes
+                self.batches += 1
+                continue
+            jax.block_until_ready(out)
+            self.lat.setdefault(op, []).append(time.perf_counter() - t0)
+            self.batches += 1
+
+    def report(self) -> None:
+        self._fold_stats()
+        served = sum(len(v) for v in self.lat.values())
+        total = served * self.read_batch
+        print(f"\nreads: {total} queries in {served} batches of "
+              f"{self.read_batch} (staleness={self.policy}"
+              + (f", {self.skipped_stale} batches skipped stale"
+                 if self.skipped_stale else "") + ")")
+        for op in sorted(self.lat):
+            ms = np.asarray(self.lat[op]) * 1e3
+            print(f"  {op:15s}: p50 {np.percentile(ms, 50):7.2f} ms  "
+                  f"p95 {np.percentile(ms, 95):7.2f} ms  "
+                  f"({len(ms)} batches)")
+        t = self.totals
+        amort = t["build_syncs_total"] / max(served, 1)
+        print(f"query sync accounting: {t['builds']} table builds, "
+              f"{t['build_syncs_total']} build syncs "
+              f"({amort:.2f} amortized per read batch; queries are "
+              f"sync-free gathers), stale_served={t['stale_served']}, "
+              f"auto_refreshes={t['auto_refreshes']}")
+
+
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(
         description="batch-dynamic RST serving loop (DESIGN.md §9–§11)")
@@ -75,6 +216,16 @@ def main(argv=None) -> None:
                     choices=("incremental", "full", "off"),
                     help="maintain pool biconnectivity at the tour "
                          "cadence (DESIGN.md §10)")
+    ap.add_argument("--read-ratio", type=float, default=0.0,
+                    help="fraction of events that are queries: per write "
+                         "batch, issue read batches until reads/(reads+"
+                         "writes) ~ r (0 = writes only)")
+    ap.add_argument("--read-batch", type=int, default=64,
+                    help="queries per read batch")
+    ap.add_argument("--query-staleness", default="stale",
+                    choices=("strict", "refresh", "stale"),
+                    help="QuerySession policy between tour refreshes "
+                         "(DESIGN.md §12)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--validate", action="store_true",
                     help="oracle-check the final forest")
@@ -96,6 +247,11 @@ def main(argv=None) -> None:
     ap.add_argument("--resume", action="store_true",
                     help="resume from the newest checkpoint in --ckpt-dir")
     args = ap.parse_args(argv)
+    if args.read_ratio and not 0.0 < args.read_ratio < 1.0:
+        ap.error("--read-ratio must be in (0, 1)")
+    if args.read_ratio and args.tour == "off":
+        ap.error("--read-ratio needs tour maintenance "
+                 "(--tour incremental|full)")
 
     import jax
 
@@ -149,7 +305,11 @@ def main(argv=None) -> None:
         warm, _ = replay_batch(loop.state, batches[loop.cursor])
         jax.block_until_ready(warm.parent)
 
+    reads = _ReadDriver(loop, args, n) if args.read_ratio else None
+
     def on_batch(step, stats, dt):
+        if reads is not None:
+            reads.serve(step)
         if step < 3 or (step + 1) % 8 == 0:
             line = (f"  batch {step:3d}: {dt*1e3:6.1f} ms  "
                     f"cuts={int(stats['cuts'])} links={int(stats['links'])} "
@@ -190,6 +350,8 @@ def main(argv=None) -> None:
                   f"final n_bcc={int(loop.bcc.n_bcc)} "
                   f"bridges={int(loop.bcc.n_bridges)} "
                   f"articulation={int(loop.bcc.n_articulation)}")
+    if reads is not None:
+        reads.report()
     if loop.quarantine:
         total = sum(loop.quarantine.values())
         cats = ", ".join(f"{k}={v}" for k, v in

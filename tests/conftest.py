@@ -1,0 +1,50 @@
+"""Suite-wide pytest configuration: slow-marker gating + hypothesis pinning.
+
+Tier-1 (``scripts/tier1.sh``, plain ``pytest``) must stay fast and
+deterministic, so tests marked ``slow`` — the full property sweeps —
+are auto-skipped unless ``--run-slow`` is passed
+(``scripts/test_full.sh`` does).
+
+If hypothesis is installed, a deterministic profile is pinned: fixed
+derandomized example generation, with CI-vs-local example counts
+(override with HYPOTHESIS_PROFILE / HYPOTHESIS_EXAMPLES). The container
+may not ship hypothesis at all; tests that *require* it must
+``pytest.importorskip("hypothesis")`` — the deterministic numpy-seeded
+sweeps in test_queries.py carry the differential coverage either way.
+"""
+import os
+
+import pytest
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--run-slow", action="store_true", default=False,
+        help="run tests marked slow (the full property sweeps)")
+
+
+def pytest_collection_modifyitems(config, items):
+    if config.getoption("--run-slow"):
+        return
+    skip = pytest.mark.skip(
+        reason="slow: pass --run-slow (scripts/test_full.sh)")
+    for item in items:
+        if "slow" in item.keywords:
+            item.add_marker(skip)
+
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "repro-deterministic",
+        max_examples=int(os.environ.get(
+            "HYPOTHESIS_EXAMPLES", "20" if os.environ.get("CI") else "50")),
+        derandomize=True,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+    settings.load_profile(
+        os.environ.get("HYPOTHESIS_PROFILE", "repro-deterministic"))
+except ImportError:
+    pass

@@ -1,0 +1,196 @@
+"""Shared networkx reference oracles for the test suite.
+
+One home for the exact-reference helpers that were previously duplicated
+across test_bcc / test_dynamic_bcc / test_chaos_recovery, plus the tree
+*query* oracles test_queries.py checks the batched query layer against.
+Everything here is deliberately slow-and-obviously-correct python/networkx;
+the library under test must match it bit-for-bit.
+"""
+import numpy as np
+import pytest
+
+
+def edge_key(u, v):
+    """Unordered edge identity."""
+    return frozenset((int(u), int(v)))
+
+
+def require_nx():
+    return pytest.importorskip("networkx")
+
+
+# ---------------------------------------------------------------------------
+# graph builders
+# ---------------------------------------------------------------------------
+
+def nx_simple_graph(g):
+    """``core.graph.Graph`` → nx.Graph (sentinel-padding + self-loop aware)."""
+    nx = require_nx()
+    nxg = nx.Graph()
+    nxg.add_nodes_from(range(g.n_nodes))
+    src = np.asarray(g.src)
+    dst = np.asarray(g.dst)
+    real = (src < g.n_nodes) & (dst < g.n_nodes)
+    nxg.add_edges_from((int(u), int(v)) for u, v, ok in
+                       zip(src, dst, real) if ok and u != v)
+    return nxg
+
+
+def nx_live_multigraph(lg):
+    """``live_graph(state)`` → (nx, nx.MultiGraph) over the pool slots.
+
+    MultiGraph: streams can re-insert a live edge, and a doubled edge is
+    a cycle (never a bridge) — a simple Graph would collapse it.
+    ``live_graph`` symmetrizes (both directions); one slot = first half.
+    """
+    nx = require_nx()
+    nxg = nx.MultiGraph()
+    nxg.add_nodes_from(range(lg.n_nodes))
+    src = np.asarray(lg.src)[: len(lg.src) // 2]
+    dst = np.asarray(lg.dst)[: len(lg.dst) // 2]
+    real = (src < lg.n_nodes) & (dst < lg.n_nodes)
+    nxg.add_edges_from((int(u), int(v)) for u, v, ok in
+                       zip(src, dst, real) if ok and u != v)
+    return nx, nxg
+
+
+def nx_forest(parent):
+    """Self-rooted parent array → (nx, DiGraph parent→child, root set)."""
+    nx = require_nx()
+    parent = np.asarray(parent)
+    t = nx.DiGraph()
+    t.add_nodes_from(range(parent.shape[0]))
+    roots = set()
+    for v in range(parent.shape[0]):
+        if int(parent[v]) == v:
+            roots.add(v)
+        else:
+            t.add_edge(int(parent[v]), v)
+    return nx, t, roots
+
+
+# ---------------------------------------------------------------------------
+# biconnectivity reference
+# ---------------------------------------------------------------------------
+
+def nx_bcc_reference(g):
+    """(articulation set, bridge set, edge partition) via networkx."""
+    nx = require_nx()
+    nxg = nx_simple_graph(g)
+    art = set(nx.articulation_points(nxg))
+    bridges = {edge_key(u, v) for u, v in nx.bridges(nxg)}
+    partition = frozenset(
+        frozenset(edge_key(u, v) for u, v in comp)
+        for comp in nx.biconnected_component_edges(nxg))
+    return art, bridges, partition
+
+
+# ---------------------------------------------------------------------------
+# partitions
+# ---------------------------------------------------------------------------
+
+def canonical_partition(rep):
+    """Order-of-first-appearance canonical labels — partition identity."""
+    rep = np.asarray(rep)
+    _, first, inverse = np.unique(rep, return_index=True,
+                                  return_inverse=True)
+    return np.argsort(np.argsort(first))[inverse]
+
+
+# ---------------------------------------------------------------------------
+# tree-query oracles (the differential reference for core/dynamic queries)
+# ---------------------------------------------------------------------------
+
+_IDENTITY = {"add": 0,
+             "min": np.iinfo(np.int32).max,
+             "max": np.iinfo(np.int32).min}
+_FOLD = {"add": lambda a, b: a + b, "min": min, "max": max}
+
+
+def query_identity(op):
+    """The combine identity ``core.queries`` returns for empty/invalid."""
+    return _IDENTITY[op]
+
+
+class TreeOracle:
+    """Prebuilt networkx reference for one rooted forest.
+
+    Answers every op of the batched query layer (``core.queries``) the
+    slow, obviously-correct way — against the *same* parent array the
+    library built its tables from, so answers must be bit-exact. Ids
+    outside [0, n) (the padding sentinel) get each op's failure value,
+    matching the library contract.
+    """
+
+    def __init__(self, parent):
+        self.parent = np.asarray(parent)
+        self.n = self.parent.shape[0]
+        self.nx, self.t, self.roots = nx_forest(self.parent)
+        self.und = self.t.to_undirected()
+        self.depths = np.full(self.n, -1, np.int64)
+        for r in self.roots:
+            for v, d in self.nx.single_source_shortest_path_length(
+                    self.t, r).items():
+                self.depths[v] = d
+
+    def _ok(self, *vs):
+        return all(0 <= int(v) < self.n for v in vs)
+
+    def lca(self, u, v):
+        if not self._ok(u, v):
+            return -1
+        w = self.nx.lowest_common_ancestor(self.t, int(u), int(v),
+                                           default=None)
+        return -1 if w is None else int(w)
+
+    def connected(self, u, v):
+        return (self._ok(u, v)
+                and self.nx.has_path(self.und, int(u), int(v)))
+
+    def depth_of(self, v):
+        return int(self.depths[int(v)]) if self._ok(v) else -1
+
+    def is_ancestor(self, a, x):
+        if not self._ok(a, x):
+            return False
+        return (int(a) == int(x)
+                or int(x) in self.nx.descendants(self.t, int(a)))
+
+    def subtree_agg(self, payload, v, op="add"):
+        if not self._ok(v):
+            return query_identity(op)
+        payload = np.asarray(payload)
+        acc = query_identity(op)
+        for x in (set(self.nx.descendants(self.t, int(v))) | {int(v)}):
+            acc = _FOLD[op](acc, int(payload[x]))
+        return acc
+
+    def path_agg(self, payload, u, v, op="add"):
+        if not self.connected(u, v):
+            return query_identity(op)
+        payload = np.asarray(payload)
+        acc = query_identity(op)
+        for x in self.nx.shortest_path(self.und, int(u), int(v)):
+            acc = _FOLD[op](acc, int(payload[x]))
+        return acc
+
+
+def oracle_lca(parent, u, v):
+    """One-shot LCA in the rooted forest; -1 across trees."""
+    return TreeOracle(parent).lca(u, v)
+
+
+def oracle_depths(parent):
+    """int depth per vertex: BFS from every root of the parent DiGraph."""
+    return TreeOracle(parent).depths
+
+
+def oracle_bridges(nxg):
+    """Bridge edge-key set of a (Multi)Graph — parallel-edge aware."""
+    nx = require_nx()
+    return {edge_key(u, v) for u, v in nx.bridges(nxg)}
+
+
+def oracle_articulation(nxg):
+    nx = require_nx()
+    return set(nx.articulation_points(nxg))

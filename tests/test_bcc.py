@@ -8,13 +8,11 @@ import numpy as np
 import jax.numpy as jnp
 import pytest
 
+from oracles import edge_key as _edge
+from oracles import nx_bcc_reference
 from repro.core import Graph, bcc_batch, biconnectivity, tour_numbering
 from repro.core.rst import METHODS
 from repro.data import graphs as G
-
-
-def _edge(u, v):
-    return frozenset((int(u), int(v)))
 
 
 def _decompose(g, flavor, root=0):
@@ -36,22 +34,8 @@ def _decompose(g, flavor, root=0):
     return art, bridges, partition, int(res.n_bcc)
 
 
-def _nx_reference(g):
-    nx = pytest.importorskip("networkx")
-    nxg = nx.Graph()
-    nxg.add_nodes_from(range(g.n_nodes))
-    nxg.add_edges_from(zip(np.asarray(g.src).tolist(),
-                           np.asarray(g.dst).tolist()))
-    art = set(nx.articulation_points(nxg))
-    bridges = {_edge(u, v) for u, v in nx.bridges(nxg)}
-    partition = frozenset(
-        frozenset(_edge(u, v) for u, v in comp)
-        for comp in nx.biconnected_component_edges(nxg))
-    return art, bridges, partition
-
-
 def _assert_matches_nx(g, root=0):
-    art_ref, bridges_ref, partition_ref = _nx_reference(g)
+    art_ref, bridges_ref, partition_ref = nx_bcc_reference(g)
     for flavor in METHODS:
         art, bridges, partition, n_bcc = _decompose(g, flavor, root)
         assert art == art_ref, (flavor, art ^ art_ref)
@@ -147,7 +131,7 @@ def test_disconnected_forest_flavors_full_bfs_root_component():
     # triangle {0,1,2} + path 3-4-5 (cut vertex 4, two bridges)
     g = Graph.from_numpy_undirected(
         6, np.asarray([(0, 1), (1, 2), (2, 0), (3, 4), (4, 5)]))
-    art_ref, bridges_ref, partition_ref = _nx_reference(g)
+    art_ref, bridges_ref, partition_ref = nx_bcc_reference(g)
     for flavor in ("gconn_euler", "pr_rst"):
         art, bridges, partition, n_bcc = _decompose(g, flavor)
         assert art == art_ref and bridges == bridges_ref

@@ -5,6 +5,8 @@ and the serve_stream --steps 0 regression."""
 import numpy as np
 import pytest
 
+from oracles import canonical_partition as _canon
+from oracles import nx_live_multigraph as _nx_graph
 from repro.core.connectivity import connected_components
 from repro.data import graphs as G
 from repro.data.streams import STREAMS
@@ -17,28 +19,6 @@ from repro.launch.resilient import ResilientStreamLoop
 
 #: injector → does it corrupt forest structure (vs a cache snapshot)?
 _STRUCTURAL = {name: name != "stale_bcc" for name in INJECTORS}
-
-
-def _canon(rep):
-    rep = np.asarray(rep)
-    _, first, inverse = np.unique(rep, return_index=True,
-                                  return_inverse=True)
-    return np.argsort(np.argsort(first))[inverse]
-
-
-def _nx_graph(lg):
-    # MultiGraph: streams can re-insert a live edge, and a doubled edge
-    # is a cycle (never a bridge) — a simple Graph would collapse it.
-    nx = pytest.importorskip("networkx")
-    nxg = nx.MultiGraph()
-    nxg.add_nodes_from(range(lg.n_nodes))
-    # live_graph symmetrizes (both directions); one slot = first half.
-    src = np.asarray(lg.src)[: len(lg.src) // 2]
-    dst = np.asarray(lg.dst)[: len(lg.dst) // 2]
-    real = (src < lg.n_nodes) & (dst < lg.n_nodes)
-    nxg.add_edges_from((int(u), int(v)) for u, v, ok in
-                       zip(src, dst, real) if ok and u != v)
-    return nx, nxg
 
 
 def _assert_matches_oracles(state, tn, bcc, tag):

@@ -6,6 +6,8 @@ import jax.numpy as jnp
 import pytest
 from numpy.testing import assert_array_equal
 
+from oracles import edge_key as _edge
+from oracles import nx_bcc_reference
 from repro.core import biconnectivity
 from repro.core.graph import Graph
 from repro.data import graphs as G
@@ -17,28 +19,6 @@ from repro.dynamic import (apply_batch, forest_empty, init_state,
 #: every DynamicBCC decomposition field (the bit-identity surface).
 _FIELDS = ("rep", "low", "high", "articulation", "bridge", "edge_bcc",
            "n_bcc")
-
-
-def _edge(u, v):
-    return frozenset((int(u), int(v)))
-
-
-def _nx_reference(g: Graph):
-    """(articulation set, bridge set, edge partition) via networkx."""
-    nx = pytest.importorskip("networkx")
-    nxg = nx.Graph()
-    nxg.add_nodes_from(range(g.n_nodes))
-    src = np.asarray(g.src)
-    dst = np.asarray(g.dst)
-    real = (src < g.n_nodes) & (dst < g.n_nodes)
-    nxg.add_edges_from((int(u), int(v)) for u, v, ok in
-                       zip(src, dst, real) if ok and u != v)
-    art = set(nx.articulation_points(nxg))
-    bridges = {_edge(u, v) for u, v in nx.bridges(nxg)}
-    partition = frozenset(
-        frozenset(_edge(u, v) for u, v in comp)
-        for comp in nx.biconnected_component_edges(nxg))
-    return art, bridges, partition
 
 
 def _decompose_dynamic(state, bcc):
@@ -65,7 +45,7 @@ def _decompose_dynamic(state, bcc):
 def _assert_oracle(state, bcc, tag):
     """bcc matches networkx AND a from-scratch static biconnectivity."""
     lg = live_graph(state)
-    art_ref, bridges_ref, partition_ref = _nx_reference(lg)
+    art_ref, bridges_ref, partition_ref = nx_bcc_reference(lg)
     art, bridges, partition, n_bcc = _decompose_dynamic(state, bcc)
     assert art == art_ref, (tag, art ^ art_ref)
     assert bridges == bridges_ref, (tag, bridges ^ bridges_ref)

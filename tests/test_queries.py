@@ -1,0 +1,432 @@
+"""Differential test harness for the batched tree-query layer (DESIGN.md §12).
+
+Every query op — lca / connected / depth / is_ancestor / subtree_agg /
+path_agg / is_bridge / is_articulation — is checked bit-exact against
+the slow networkx oracles in ``tests/oracles.py``:
+
+  * statically, on trees from **all three RST flavors** over the
+    generator suite (including disconnected graphs, where bfs covers
+    only the root component and the oracle sees the same parent array);
+  * dynamically, **after every ``apply_batch``** across stream
+    generators, including forced cross-component pairs after cuts
+    (connected=False, lca=-1 sentinel) and multigraph parallel-edge
+    bridge semantics;
+  * under a deterministic seeded-numpy property sweep (tier-1 slice +
+    the full ``slow``-marked sweep), plus a hypothesis-driven variant
+    when hypothesis is installed (profile pinned in conftest.py).
+
+The staleness contract (DynamicForest.version ↔ QuerySession stamp) has
+its own regression tests: a query after an un-refreshed pool edit must
+recompute or raise — never silently serve stale intervals.
+"""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+import oracles
+from oracles import TreeOracle, edge_key, query_identity
+from repro.core import queries as q
+from repro.core import rooted_spanning_tree, tour_numbering
+from repro.core.graph import Graph
+from repro.core.rst import METHODS
+from repro.data import graphs as G
+from repro.data.streams import STREAMS
+from repro.dynamic import (QuerySession, StaleQueryError, apply_batch,
+                           edge_slots, forest_empty, init_state, live_graph,
+                           refresh_bcc, refresh_tour, replay_batch)
+
+OPS = ("add", "min", "max")
+
+
+def _pairs(rng, n, k, comp=None):
+    """Query-pair sample: random, identical, adjacent, invalid, and —
+    when the forest is disconnected — forced cross-component pairs."""
+    u = rng.integers(0, n, k).tolist()
+    v = rng.integers(0, n, k).tolist()
+    w = int(rng.integers(0, n))
+    u += [w, 0, n, -1]            # identical pair + invalid ids
+    v += [w, n, 0, 2 % n]
+    if comp is not None:
+        comp = np.asarray(comp)
+        labels = np.unique(comp)
+        if labels.size >= 2:
+            a = np.nonzero(comp == labels[0])[0]
+            b = np.nonzero(comp == labels[1])[0]
+            for _ in range(4):    # forced cross-component pairs
+                u.append(int(rng.choice(a)))
+                v.append(int(rng.choice(b)))
+    return (np.asarray(u, np.int32), np.asarray(v, np.int32))
+
+
+def _check_tree_ops(tables, payload, u, v, tag):
+    """Every tour-interval op vs the TreeOracle, bit-exact per query."""
+    ref = TreeOracle(tables.parent)
+    got_lca = np.asarray(q.lca(tables, u, v))
+    got_conn = np.asarray(q.connected(tables, u, v))
+    got_depth = np.asarray(q.depth_of(tables, u))
+    got_anc = np.asarray(q.is_ancestor(tables, u, v))
+    sub = {op: np.asarray(q.subtree_agg(tables, u, payload, op))
+           for op in OPS}
+    pth = {op: np.asarray(q.path_agg(tables, u, v, payload, op))
+           for op in OPS}
+    for i in range(u.shape[0]):
+        a, b = int(u[i]), int(v[i])
+        at = (tag, i, a, b)
+        assert int(got_lca[i]) == ref.lca(a, b), at
+        assert bool(got_conn[i]) == ref.connected(a, b), at
+        assert int(got_depth[i]) == ref.depth_of(a), at
+        assert bool(got_anc[i]) == ref.is_ancestor(a, b), at
+        for op in OPS:
+            assert int(sub[op][i]) == ref.subtree_agg(payload, a, op), \
+                (at, op)
+            assert int(pth[op][i]) == ref.path_agg(payload, a, b, op), \
+                (at, op)
+
+
+def _check_membership(sess, state, rng, tag):
+    """is_bridge / is_articulation vs networkx on the live multigraph."""
+    nx, nxg = oracles.nx_live_multigraph(live_graph(state))
+    bridges = oracles.oracle_bridges(nxg)
+    art_ref = oracles.oracle_articulation(nxg)
+    n = state.n_nodes
+    # Half the pairs from live slots (hits), half random (mostly misses).
+    src = np.asarray(state.pool_src)
+    dst = np.asarray(state.pool_dst)
+    live = np.nonzero((src < n) & (dst < n))[0]
+    k = min(12, live.size)
+    picks = rng.choice(live, size=k, replace=False) if k else []
+    u = [int(src[e]) for e in picks] + rng.integers(0, n, 8).tolist()
+    v = [int(dst[e]) for e in picks] + rng.integers(0, n, 8).tolist()
+    u, v = np.asarray(u, np.int32), np.asarray(v, np.int32)
+    got = np.asarray(sess.is_bridge(state, u, v))
+    for i in range(u.shape[0]):
+        want = edge_key(u[i], v[i]) in bridges
+        assert bool(got[i]) == want, (tag, int(u[i]), int(v[i]))
+    verts = np.asarray(rng.integers(0, n, 16), np.int32)
+    got_art = np.asarray(sess.is_articulation(state, verts))
+    for i, x in enumerate(verts):
+        assert bool(got_art[i]) == (int(x) in art_ref), (tag, int(x))
+
+
+# ------------------------------------------------------------ static trees
+
+STATIC_GRAPHS = {
+    "chain": lambda: G.chain(17),
+    "grid": lambda: G.grid2d(5),
+    "erdos": lambda: G.erdos_renyi(48, avg_degree=3, seed=2),
+    "rmat": lambda: G.rmat(5, edge_factor=2, seed=3),
+}
+
+
+@pytest.mark.parametrize("flavor", METHODS)
+@pytest.mark.parametrize("graph_name", sorted(STATIC_GRAPHS))
+def test_static_queries_match_oracle(flavor, graph_name):
+    """All ops on all three flavors' trees match networkx bit-exactly."""
+    g = STATIC_GRAPHS[graph_name]()
+    res = rooted_spanning_tree(g, 0, method=flavor)
+    tn = tour_numbering(res.parent)
+    tables = q.build_tables(tn)
+    rng = np.random.default_rng(7)
+    payload = jnp.asarray(rng.integers(1, 100, g.n_nodes), jnp.int32)
+    u, v = _pairs(rng, g.n_nodes, 24, comp=tn.comp)
+    _check_tree_ops(tables, payload, u, v, (flavor, graph_name))
+
+
+def test_lca_goldens():
+    """Hand-checkable answers on a star and a path."""
+    # Path 0-1-2-3-4 rooted at 0: lca = the closer-to-root endpoint.
+    par = jnp.asarray([0, 0, 1, 2, 3], jnp.int32)
+    t = q.build_tables(tour_numbering(par))
+    assert np.asarray(q.lca(t, jnp.asarray([4, 2, 0]),
+                            jnp.asarray([2, 3, 4]))).tolist() == [2, 2, 0]
+    assert np.asarray(q.depth_of(t, jnp.arange(5))).tolist() == [
+        0, 1, 2, 3, 4]
+    # Star rooted at 0: any two distinct leaves meet at the hub.
+    par = jnp.asarray([0, 0, 0, 0, 0], jnp.int32)
+    t = q.build_tables(tour_numbering(par))
+    assert np.asarray(q.lca(t, jnp.asarray([1, 2, 3]),
+                            jnp.asarray([2, 3, 3]))).tolist() == [0, 0, 3]
+
+
+def test_build_tables_sync_accounting():
+    """The build pays rank syncs + levels; queries after it pay zero
+    (fixed-shape gathers only — nothing to count, the contract table7
+    amortizes)."""
+    g = G.grid2d(8)
+    res = rooted_spanning_tree(g, 0, method="gconn_euler")
+    tables = q.build_tables(tour_numbering(res.parent))
+    levels = tables.levels
+    assert int(tables.build_syncs) >= levels
+    assert tables.up.shape == (levels + 1, g.n_nodes)
+
+
+# --------------------------------------------------------- dynamic replay
+
+def _dyn_case(graph_name):
+    return G.grid2d(7) if graph_name == "grid" else G.rmat(5, 4, seed=2)
+
+
+@pytest.mark.parametrize("stream_name", ["churn", "sliding_window"])
+@pytest.mark.parametrize("graph_name", ["grid", "rmat"])
+def test_dynamic_queries_match_oracle_every_batch(stream_name, graph_name):
+    """After every apply_batch + refresh, the session's answers match
+    networkx on the maintained tree AND the live multigraph."""
+    g = _dyn_case(graph_name)
+    stream = STREAMS[stream_name](g, batch=12, seed=3, n_batches=6)
+    state = init_state(stream)
+    tn, state = refresh_tour(state, None)
+    bcc = refresh_bcc(state, None, tour=tn)
+    sess = QuerySession.from_state(state, tn, bcc)
+    rng = np.random.default_rng(5)
+    payload = jnp.asarray(rng.integers(1, 100, g.n_nodes), jnp.int32)
+    for step, b in enumerate(stream.batches):
+        state, _ = replay_batch(state, b)
+        tn, state = refresh_tour(state, tn)
+        bcc = refresh_bcc(state, bcc, tour=tn)
+        sess.rebuild(state, tn=tn, bcc=bcc)
+        tag = f"{stream_name}/{graph_name}@{step}"
+        u, v = _pairs(rng, g.n_nodes, 16, comp=tn.comp)
+        _check_tree_ops(sess.tables, payload, u, v, tag)
+        if step % 2 == 1 or step == len(stream.batches) - 1:
+            _check_membership(sess, state, rng, tag)
+    assert sess.builds == len(stream.batches) + 1
+    assert sess.stale_served == 0 and sess.auto_refreshes == 0
+
+
+@pytest.mark.parametrize("flavor", METHODS)
+def test_dynamic_snapshots_all_flavors(flavor):
+    """Each flavor's tree over evolving live-graph snapshots answers
+    queries oracle-exactly (the 3-flavor leg of the dynamic sweep)."""
+    g = G.grid2d(6)
+    stream = STREAMS["churn"](g, batch=10, seed=1, n_batches=4)
+    state = init_state(stream)
+    rng = np.random.default_rng(11)
+    payload = jnp.asarray(rng.integers(1, 100, g.n_nodes), jnp.int32)
+    for step, b in enumerate(stream.batches):
+        state, _ = replay_batch(state, b)
+        lg = live_graph(state)
+        root = int(np.asarray(state.rep)[0])
+        res = rooted_spanning_tree(lg, root, method=flavor)
+        tables = q.build_tables(tour_numbering(res.parent))
+        u, v = _pairs(rng, g.n_nodes, 12, comp=tables.comp)
+        _check_tree_ops(tables, payload, u, v, (flavor, step))
+
+
+def test_cross_component_pairs_after_cut():
+    """Severing the only connecting edge flips the query answers: the
+    sentinel contract for cross-component pairs."""
+    n = 6
+    st = forest_empty(n, capacity=8)
+    iu = jnp.asarray([0, 1, 2, 3, 4], jnp.int32)
+    iv = jnp.asarray([1, 2, 3, 4, 5], jnp.int32)
+    st, _ = apply_batch(st, iu, iv, jnp.zeros((8,), jnp.bool_))
+    tn, st = refresh_tour(st, None)
+    sess = QuerySession.from_state(st, tn)
+    assert bool(sess.connected(st, 0, 5)[0])
+    assert int(sess.lca(st, 0, 5)[0]) >= 0
+
+    dm, found = edge_slots(st, jnp.asarray([2], jnp.int32),
+                           jnp.asarray([3], jnp.int32))
+    assert bool(found[0])
+    st, stats = apply_batch(st, jnp.zeros((0,), jnp.int32),
+                            jnp.zeros((0,), jnp.int32), dm)
+    assert int(stats["cuts"]) == 1
+    tn, st = refresh_tour(st, tn)
+    sess.rebuild(st, tn=tn)
+    payload = jnp.ones((n,), jnp.int32)
+    assert not bool(sess.connected(st, 0, 5)[0])
+    assert int(sess.lca(st, 0, 5)[0]) == -1
+    assert int(sess.path_agg(st, 0, 5, payload, "add")[0]) == \
+        query_identity("add")
+    assert int(sess.path_agg(st, 0, 5, payload, "min")[0]) == \
+        query_identity("min")
+    # Within each surviving component everything still answers.
+    assert bool(sess.connected(st, 0, 2)[0])
+    assert int(sess.path_agg(st, 0, 2, payload, "add")[0]) == 3
+    assert bool(sess.connected(st, 3, 5)[0])
+
+
+def test_parallel_edge_bridge_membership():
+    """Multigraph semantics: a doubled edge is a cycle, never a bridge —
+    and an absent pair answers False, not an error."""
+    n = 3
+    st = forest_empty(n, capacity=4)
+    iu = jnp.asarray([0, 1, 0], jnp.int32)   # path 0-1-2 + copy of (0,1)
+    iv = jnp.asarray([1, 2, 1], jnp.int32)
+    st, _ = apply_batch(st, iu, iv, jnp.zeros((4,), jnp.bool_))
+    tn, st = refresh_tour(st, None)
+    bcc = refresh_bcc(st, None, tour=tn)
+    sess = QuerySession.from_state(st, tn, bcc)
+    got = np.asarray(sess.is_bridge(st, jnp.asarray([0, 1, 0]),
+                                    jnp.asarray([1, 2, 2])))
+    assert got.tolist() == [False, True, False]
+    art = np.asarray(sess.is_articulation(st, jnp.arange(3)))
+    assert art.tolist() == [False, True, False]
+
+
+# ------------------------------------------------------ staleness contract
+
+def test_stale_query_strict_raises():
+    """Regression (the staleness hazard): a query after an un-refreshed
+    pool edit must raise — even when the edit didn't move the tree."""
+    g = G.grid2d(4)
+    stream = STREAMS["churn"](g, batch=8, seed=0, n_batches=2)
+    state = init_state(stream)
+    tn, state = refresh_tour(state, None)
+    sess = QuerySession.from_state(state, tn)
+    sess.lca(state, 0, 1)                      # fresh: fine
+    # Insert a cycle edge: parent may not move, but the pool did — the
+    # version bump must still invalidate the session.
+    state2, _ = apply_batch(state, jnp.asarray([0], jnp.int32),
+                            jnp.asarray([5], jnp.int32),
+                            jnp.zeros((state.capacity,), jnp.bool_))
+    assert int(state2.version) == int(state.version) + 1
+    with pytest.raises(StaleQueryError):
+        sess.lca(state2, 0, 1)
+    with pytest.raises(StaleQueryError):
+        sess.subtree_agg(state2, 0, jnp.ones(g.n_nodes, jnp.int32))
+    # The old state still matches the stamp.
+    sess.lca(state, 0, 1)
+
+
+def test_stale_query_refresh_policy_recomputes():
+    g = G.grid2d(4)
+    stream = STREAMS["churn"](g, batch=8, seed=0, n_batches=3)
+    state = init_state(stream)
+    tn, state = refresh_tour(state, None)
+    bcc = refresh_bcc(state, None, tour=tn)
+    sess = QuerySession.from_state(state, tn, bcc, policy="refresh")
+    state, _ = replay_batch(state, stream.batches[0])
+    got = sess.lca(state, 2, 3)
+    assert sess.auto_refreshes == 1 and sess.is_fresh(state)
+    tn_full = tour_numbering(state.parent)
+    assert int(got[0]) == oracles.oracle_lca(tn_full.parent, 2, 3)
+    # BCC labels refreshed too (snapshot-diff would reject stale ones).
+    sess.is_bridge(state, 0, 1)
+
+
+def test_stale_query_stale_policy_serves_and_counts():
+    g = G.grid2d(4)
+    stream = STREAMS["churn"](g, batch=8, seed=0, n_batches=3)
+    state = init_state(stream)
+    tn, state = refresh_tour(state, None)
+    sess = QuerySession.from_state(state, tn, policy="stale")
+    before = np.asarray(sess.lca(state, jnp.arange(4), jnp.arange(1, 5)))
+    state2, _ = replay_batch(state, stream.batches[0])
+    served = np.asarray(sess.lca(state2, jnp.arange(4), jnp.arange(1, 5)))
+    assert sess.stale_served == 1
+    assert np.array_equal(before, served)     # frozen view, by design
+
+
+def test_session_rejects_stale_caches_on_build():
+    """The §10 snapshot-diff at construction: somebody else's tn/bcc
+    cannot seed a session."""
+    g = G.grid2d(4)
+    stream = STREAMS["churn"](g, batch=8, seed=0, n_batches=2)
+    state = init_state(stream)
+    tn, state = refresh_tour(state, None)
+    bcc = refresh_bcc(state, None, tour=tn)
+    state2, _ = replay_batch(state, stream.batches[0])
+    with pytest.raises(ValueError, match="stale TourNumbering"):
+        QuerySession.from_state(state2, tn)
+    with pytest.raises(ValueError, match="stale DynamicBCC"):
+        QuerySession.from_state(
+            state2, None, bcc)
+    with pytest.raises(ValueError, match="policy"):
+        QuerySession.from_state(state, tn, policy="yolo")
+
+
+def test_bcc_ops_require_bcc():
+    g = G.grid2d(3)
+    stream = STREAMS["churn"](g, batch=4, seed=0, n_batches=2)
+    state = init_state(stream)
+    tn, state = refresh_tour(state, None)
+    sess = QuerySession.from_state(state, tn)
+    with pytest.raises(ValueError, match="without biconnectivity"):
+        sess.is_bridge(state, 0, 1)
+    with pytest.raises(ValueError, match="without biconnectivity"):
+        sess.is_articulation(state, 0)
+
+
+def test_version_survives_chaos_roundtrip():
+    """Injectors copy state through numpy and back; the version stamp
+    must survive, or staleness checks silently disarm."""
+    from repro.dynamic import inject
+    g = G.grid2d(4)
+    stream = STREAMS["churn"](g, batch=8, seed=0, n_batches=2)
+    state = init_state(stream)
+    bad, _, _ = inject("rep_corrupt", state, None, seed=1)
+    assert int(bad.version) == int(state.version)
+
+
+# -------------------------------------------------- property sweeps
+
+def _random_stream_case(seed):
+    rng = np.random.default_rng(seed)
+    kind = ("grid", "erdos", "rmat")[seed % 3]
+    if kind == "grid":
+        g = G.grid2d(int(rng.integers(4, 8)))
+    elif kind == "erdos":
+        g = G.erdos_renyi(int(rng.integers(24, 64)),
+                          avg_degree=float(rng.uniform(2, 4)), seed=seed)
+    else:
+        g = G.rmat(int(rng.integers(4, 6)), edge_factor=3, seed=seed)
+    name = sorted(STREAMS)[seed % len(STREAMS)]
+    stream = STREAMS[name](g, batch=int(rng.integers(6, 16)), seed=seed,
+                           n_batches=4)
+    return g, stream
+
+
+def _sweep_one(seed, n_batches_checked):
+    g, stream = _random_stream_case(seed)
+    state = init_state(stream)
+    tn, state = refresh_tour(state, None)
+    bcc = refresh_bcc(state, None, tour=tn)
+    sess = QuerySession.from_state(state, tn, bcc)
+    rng = np.random.default_rng(seed + 1)
+    payload = jnp.asarray(rng.integers(1, 100, g.n_nodes), jnp.int32)
+    for step, b in enumerate(stream.batches[:n_batches_checked]):
+        state, _ = replay_batch(state, b)
+        tn, state = refresh_tour(state, tn)
+        bcc = refresh_bcc(state, bcc, tour=tn)
+        sess.rebuild(state, tn=tn, bcc=bcc)
+        u, v = _pairs(rng, g.n_nodes, 12, comp=tn.comp)
+        _check_tree_ops(sess.tables, payload, u, v, (seed, step))
+        _check_membership(sess, state, rng, (seed, step))
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_property_sweep_tier1_slice(seed):
+    """Deterministic seeded sweep — the tier-1 slice of the full
+    property suite (runs with or without hypothesis installed)."""
+    _sweep_one(seed, n_batches_checked=2)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("seed", list(range(12)))
+def test_property_sweep_full(seed):
+    """The full sweep: every stream generator × graph family × seed,
+    every batch checked (scripts/test_full.sh)."""
+    _sweep_one(seed, n_batches_checked=4)
+
+
+@pytest.mark.slow
+def test_property_sweep_hypothesis():
+    """Hypothesis-driven variant (skipped when hypothesis is absent;
+    profile pinned deterministic in conftest.py)."""
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(seed=st.integers(min_value=0, max_value=10_000))
+    def run(seed):
+        g, stream = _random_stream_case(seed % 64)
+        state = init_state(stream)
+        state, _ = replay_batch(state, stream.batches[0])
+        tn, state = refresh_tour(state, None)
+        tables = q.build_tables(tn)
+        rng = np.random.default_rng(seed)
+        payload = jnp.asarray(rng.integers(1, 100, g.n_nodes), jnp.int32)
+        u, v = _pairs(rng, g.n_nodes, 8, comp=tn.comp)
+        _check_tree_ops(tables, payload, u, v, seed)
+
+    run()
