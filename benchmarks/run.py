@@ -15,6 +15,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
                       full rebuild on injected faults (DESIGN.md §11)
   table7_queries/*    batched tree-query serving: amortized QueryTables
                       vs per-read-batch recompute (DESIGN.md §12)
+  table8_fleet/*      multi-tenant fleet: vmapped T-tenant apply vs T
+                      sequential loops, sync accounting (DESIGN.md §13)
   kernels/*           Pallas kernel micro-benchmarks (incl. compress_* engine
                       rows; interpret mode off-TPU)
   ablation_compress/* amortized vs per-hop convergence checks (engine k=5
@@ -105,7 +107,8 @@ def main(argv=None) -> None:
     from benchmarks import (ablation_hooking, fig1_runtime, fig2_depth,
                             table1_steps, table2_stats, table3_bcc,
                             table4_dynamic, table5_dynamic_bcc,
-                            table6_robustness, table7_queries)
+                            table6_robustness, table7_queries,
+                            table8_fleet)
     from benchmarks.common import rows_to_records
     from repro.data import graphs as G
 
@@ -140,6 +143,7 @@ def main(argv=None) -> None:
     emit(table5_dynamic_bcc.run(suite))
     emit(table6_robustness.run(t6_suite))
     emit(table7_queries.run(suite))
+    emit(table8_fleet.run(suite))
     emit(ablation_hooking.run(suite))
     emit(kernel_microbench(micro_n))
     emit(compress_microbench(micro_n))

@@ -1,0 +1,149 @@
+"""Table VIII (extension): multi-tenant fleet vs T sequential loops.
+
+The §13 headline (DESIGN.md): serving T session graphs as ONE vmapped
+``ForestFleet`` amortizes the engine's convergence checks across
+tenants. Each ``apply_batches`` tick pays ``max_t(rounds_t) + 1``
+sync-point checks (the vmapped link ``while_loop`` trips until the
+slowest lane converges; converged lanes ride along as no-op bodies),
+where T independent single-tenant loops pay ``Σ_t(rounds_t + 1)`` — the
+same wall-clock-free, device-independent sync accounting tables 5–7 use
+on the XLA-CPU CI backend.
+
+Rows (one fleet/sequential pair per graph × stream, T tenants with
+decorrelated per-tenant seeds, identical event streams on both sides):
+
+  table8_fleet/{graph}/{stream}/T{T}/b{B}/fleet
+      the vmapped fleet: one (T, B) ``apply_batches`` per tick +
+      cadenced vmapped ``refresh_tours``
+  table8_fleet/{graph}/{stream}/T{T}/b{B}/sequential
+      T single-tenant ``replay_batch`` loops + per-tenant
+      ``refresh_tour`` at the same cadence
+
+derived: events_per_sec (aggregate applied events over the measured
+run), sync_total, sync_per_event. The bench asserts the two sides end
+bit-identical per tenant (parents, reps, versions) before reporting —
+a fleet row that drifted from its sequential twin is a bug, not a
+datapoint; ``scripts/bench_smoke.sh`` asserts the fleet's
+sync_per_event stays below the sequential twin's.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import csv_row
+from repro.data.graphs import build_suite
+from repro.data.streams import STREAMS
+from repro.dynamic.fleet import (apply_batches, fleet_empty,
+                                 fleet_sync_cost, refresh_tours)
+from repro.dynamic.replay import init_state, replay_batch, stream_capacity
+from repro.dynamic.tour import refresh_tour
+
+_TENANTS = 4
+_N_BATCHES = 6
+_CADENCE = 2
+_STREAM_NAMES = ("sliding_window", "churn")
+
+
+def _tick_block(streams, i):
+    return tuple(np.stack([np.asarray(getattr(s.batches[i], f))
+                           for s in streams])
+                 for f in ("ins_u", "ins_v", "del_u", "del_v"))
+
+
+def _run_fleet(streams, capacity, n_nodes, steps):
+    fleet = fleet_empty(len(streams), n_nodes, capacity)
+    for t, s in enumerate(streams):
+        fleet = fleet.set_tenant(t, init_state(s, capacity=capacity))
+    tn = None
+    sync = 0
+    for i in range(steps):
+        iu, iv, du, dv = _tick_block(streams, i)
+        fleet, stats = apply_batches(fleet, iu, iv, du, dv)
+        sync += fleet_sync_cost(stats)
+        if (i + 1) % _CADENCE == 0:
+            tn, fleet = refresh_tours(fleet, tn)
+    tn, fleet = refresh_tours(fleet, tn)
+    jax.block_until_ready(fleet.parent)
+    return fleet, sync
+
+
+def _run_sequential(streams, capacity, steps):
+    states = [init_state(s, capacity=capacity) for s in streams]
+    tns = [None] * len(streams)
+    sync = 0
+    events = 0
+    for i in range(steps):
+        for t, s in enumerate(streams):
+            states[t], stats = replay_batch(states[t], s.batches[i])
+            sync += int(stats["rounds"]) + 1
+            n = s.n_nodes
+            ins = int((np.asarray(s.batches[i].ins_u) < n).sum())
+            events += (ins - int(stats["overflow"])
+                       + int(stats["deletes_found"]))
+            if (i + 1) % _CADENCE == 0:
+                tns[t], states[t] = refresh_tour(states[t], tns[t])
+    for t in range(len(streams)):
+        tns[t], states[t] = refresh_tour(states[t], tns[t])
+    jax.block_until_ready(states[0].parent)
+    return states, sync, events
+
+
+def _assert_equal(fleet, states):
+    for t, s in enumerate(states):
+        f = fleet.tenant(t)
+        for field in ("parent", "rep", "pool_valid", "tree_mask",
+                      "version"):
+            a = np.asarray(getattr(f, field))
+            b = np.asarray(getattr(s, field))
+            assert np.array_equal(a, b), \
+                f"fleet/sequential divergence: tenant {t} field {field}"
+
+
+def run(suite=None) -> list[str]:
+    rows = []
+    suite = suite or build_suite(["grid_64", "rmat_14"])
+    for name, g in suite.items():
+        batch = 16 if g.n_nodes <= 1024 else 64
+        for stream_name in _STREAM_NAMES:
+            streams = [STREAMS[stream_name](g, batch=batch,
+                                            n_batches=_N_BATCHES, seed=t)
+                       for t in range(_TENANTS)]
+            steps = min(_N_BATCHES, min(len(s.batches) for s in streams))
+            if steps < 2:
+                continue
+            capacity = max(stream_capacity(s) for s in streams)
+
+            # Warm both paths (compile), then time one full replay each.
+            _run_fleet(streams, capacity, g.n_nodes, steps)
+            t0 = time.perf_counter()
+            fleet, sync_fleet = _run_fleet(streams, capacity, g.n_nodes,
+                                           steps)
+            t_fleet = time.perf_counter() - t0
+
+            _run_sequential(streams, capacity, steps)
+            t0 = time.perf_counter()
+            states, sync_seq, events = _run_sequential(streams, capacity,
+                                                       steps)
+            t_seq = time.perf_counter() - t0
+
+            _assert_equal(fleet, states)
+
+            base = f"table8_fleet/{name}/{stream_name}/T{_TENANTS}/b{batch}"
+            rows.append(csv_row(
+                f"{base}/fleet", t_fleet * 1e6,
+                f"events_per_sec={events / max(t_fleet, 1e-9):.0f};"
+                f"sync_total={sync_fleet};"
+                f"sync_per_event={sync_fleet / max(events, 1):.4f}"))
+            rows.append(csv_row(
+                f"{base}/sequential", t_seq * 1e6,
+                f"events_per_sec={events / max(t_seq, 1e-9):.0f};"
+                f"sync_total={sync_seq};"
+                f"sync_per_event={sync_seq / max(events, 1):.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -4,14 +4,16 @@
 # biconnectivity rows (table3/*, DESIGN.md §4), the batch-dynamic rows
 # (table4_dynamic/*, §9), and the incremental-BCC rows
 # (table5_dynamic_bcc/*, §10), the self-healing rows
-# (table6_robustness/*, §11), and the query-serving rows
-# (table7_queries/*, §12) actually landed so the downstream layers
+# (table6_robustness/*, §11), the query-serving rows
+# (table7_queries/*, §12), and the multi-tenant fleet rows
+# (table8_fleet/*, §13) actually landed so the downstream layers
 # can't silently drop out of the perf trajectory — and asserts the
 # *sync/round counts* of the incremental BCC refresh beat the full
 # recompute on the chain-regime sliding_window rows, of the scoped
 # fault repair beat the full rebuild on the single-fault (f1) rows,
-# and of the amortized query tables beat the per-read-batch recompute
-# on the read-heavy table7 rows.
+# of the amortized query tables beat the per-read-batch recompute
+# on the read-heavy table7 rows, and of the vmapped fleet's per-event
+# sync bill beat the sequential T-loop on every table8 pair.
 # Wall-clock on the XLA-CPU CI backend is volume-bound, so the sync
 # counts are the device-independent advantage this guard keeps honest
 # without a GPU.
@@ -38,6 +40,10 @@ if ! grep -q '"name": "table6_robustness/' BENCH_rst.json; then
 fi
 if ! grep -q '"name": "table7_queries/' BENCH_rst.json; then
     echo "bench_smoke: no table7_queries/* query-serving row in BENCH_rst.json" >&2
+    exit 1
+fi
+if ! grep -q '"name": "table8_fleet/' BENCH_rst.json; then
+    echo "bench_smoke: no table8_fleet/* multi-tenant fleet row in BENCH_rst.json" >&2
     exit 1
 fi
 
@@ -119,6 +125,31 @@ for name, rec in records.items():
 if t7_pairs == 0:
     sys.exit("bench_smoke: no read_heavy amortized/recompute table7 row "
              "pairs found to compare")
+
+# Multi-tenant fleet (DESIGN.md §13): the vmapped (T, B) apply must
+# charge fewer convergence checks per applied event than T sequential
+# single-tenant loops over the same streams.
+def sync_per_event(rec):
+    m = re.search(r"sync_per_event=([0-9.]+)", rec["derived"])
+    assert m, f"no sync_per_event in {rec['name']}: {rec['derived']}"
+    return float(m.group(1))
+
+t8_pairs = 0
+for name, rec in records.items():
+    if not name.startswith("table8_fleet/") or not name.endswith("/fleet"):
+        continue
+    seq = records.get(name[: -len("fleet")] + "sequential")
+    assert seq is not None, f"missing sequential twin for {name}"
+    sf, ss = sync_per_event(rec), sync_per_event(seq)
+    if sf >= ss:
+        sys.exit(f"bench_smoke: fleet sync amortization regressed: "
+                 f"{name} has sync_per_event={sf} >= sequential {ss}")
+    print(f"bench_smoke: {name}: sync_per_event {sf} < sequential {ss}")
+    t8_pairs += 1
+
+if t8_pairs == 0:
+    sys.exit("bench_smoke: no fleet/sequential table8 row pairs found "
+             "to compare")
 EOF
 
-echo "bench_smoke: ok (table3 + table4_dynamic + table5_dynamic_bcc + table6_robustness + table7_queries rows present; incremental BCC, scoped-repair, and amortized-query sync counts ahead)"
+echo "bench_smoke: ok (table3 + table4_dynamic + table5_dynamic_bcc + table6_robustness + table7_queries + table8_fleet rows present; incremental BCC, scoped-repair, amortized-query, and fleet sync counts ahead)"

@@ -6,16 +6,23 @@ layer (DESIGN.md §11): fault injection (``chaos``), O(log n) invariant
 auditing (``audit``), and the scoped-repair/rebuild ladder
 (``recovery``). The read path is ``queries``: a version-stamped
 ``QuerySession`` serving LCA / connectivity / aggregates / BCC
-membership from the cached tour intervals (DESIGN.md §12).
-Edge-stream workloads live in ``repro.data.streams``;
-the resilient serving loop in ``repro.launch.resilient`` /
-``repro.launch.serve_stream``.
+membership from the cached tour intervals (DESIGN.md §12). ``view``
+unifies the derived-cache refreshes behind ``ForestView`` + one
+``CadencePolicy``; ``fleet`` lifts the whole loop to T tenants in one
+vmapped program (DESIGN.md §13). Edge-stream workloads live in
+``repro.data.streams``; the serving loops in ``repro.launch.resilient``
+/ ``repro.launch.serve_stream`` / ``repro.launch.serve_fleet``.
 """
 from repro.dynamic.audit import AuditReport, audit_forest
 from repro.dynamic.bcc import DynamicBCC, refresh_bcc
 from repro.dynamic.chaos import (INJECTORS, POLLUTERS, inject,
                                  merge_quarantine, pollute_stream,
                                  sanitize_batch)
+from repro.dynamic.fleet import (FleetDispatcher, FleetManager,
+                                 FleetQuerySession, ForestFleet,
+                                 apply_batches, build_fleet_tables,
+                                 fleet_empty, fleet_sync_cost,
+                                 refresh_bccs, refresh_tours, tenant_slice)
 from repro.dynamic.forest import (DynamicForest, apply_batch, edge_slots,
                                   forest_empty, forest_from_graph,
                                   live_graph)
@@ -23,12 +30,18 @@ from repro.dynamic.queries import QuerySession, StaleQueryError
 from repro.dynamic.recovery import rebuild_forest, recover, repair_forest
 from repro.dynamic.replay import init_state, replay_batch, stream_capacity
 from repro.dynamic.tour import refresh_tour
+from repro.dynamic.view import (CadencePolicy, ForestView,
+                                refresh_bcc_once, refresh_tour_once)
 
 __all__ = [
-    "AuditReport", "DynamicBCC", "DynamicForest", "INJECTORS", "POLLUTERS",
-    "apply_batch", "audit_forest", "edge_slots", "forest_empty",
-    "forest_from_graph", "init_state", "inject", "live_graph",
-    "merge_quarantine", "pollute_stream", "QuerySession", "rebuild_forest",
-    "recover", "refresh_bcc", "refresh_tour", "repair_forest",
-    "replay_batch", "sanitize_batch", "StaleQueryError", "stream_capacity",
+    "AuditReport", "CadencePolicy", "DynamicBCC", "DynamicForest",
+    "FleetDispatcher", "FleetManager", "FleetQuerySession", "ForestFleet",
+    "ForestView", "INJECTORS", "POLLUTERS", "apply_batch", "apply_batches",
+    "audit_forest", "build_fleet_tables", "edge_slots", "fleet_empty",
+    "fleet_sync_cost", "forest_empty", "forest_from_graph", "init_state",
+    "inject", "live_graph", "merge_quarantine", "pollute_stream",
+    "QuerySession", "rebuild_forest", "recover", "refresh_bcc",
+    "refresh_bcc_once", "refresh_bccs", "refresh_tour", "refresh_tour_once",
+    "refresh_tours", "repair_forest", "replay_batch", "sanitize_batch",
+    "StaleQueryError", "stream_capacity", "tenant_slice",
 ]

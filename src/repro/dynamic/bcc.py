@@ -213,6 +213,10 @@ def refresh_bcc(state: DynamicForest, cached: DynamicBCC | None = None, *,
                 use_kernel: bool = False) -> DynamicBCC:
     """Refresh the pool's biconnectivity after ``apply_batch`` calls.
 
+    Deprecated thin wrapper: the canonical entry is
+    ``dynamic.view.refresh_bcc_once`` (or ``ForestView.refresh`` for
+    cadenced loops). Kept so existing callers keep working unchanged.
+
     Args:
       state: the dynamic forest (spanning invariant restored — i.e. not
         mid-``max_rounds``-truncation).
@@ -231,8 +235,7 @@ def refresh_bcc(state: DynamicForest, cached: DynamicBCC | None = None, *,
       ``refresh_tour`` this does not touch ``state.dirty`` (the tour
       refresh owns that mask); dirty tracking here is snapshot-diff.
     """
-    tn = tour if tour is not None else tour_numbering(
-        state.parent, use_kernel=use_kernel)
-    if cached is None or not incremental:
-        return _refresh_full(state, tn, use_kernel=use_kernel)
-    return _refresh_incremental(state, tn, cached, use_kernel=use_kernel)
+    from repro.dynamic.view import refresh_bcc_once
+
+    return refresh_bcc_once(state, cached, tour=tour,
+                            incremental=incremental, use_kernel=use_kernel)

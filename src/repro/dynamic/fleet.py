@@ -1,0 +1,574 @@
+"""Multi-tenant forest fleet: T session graphs in one process (DESIGN.md §13).
+
+``serve_stream`` drives ONE ``DynamicForest``; the north star is a
+process serving many independent session graphs at once. The
+``bcc_batch`` vmap pattern (§4) already showed the many-small-graphs
+shape pays on this stack — and Hong et al. (PAPERS.md, arxiv 2008.11839)
+show fixed-shape batched incremental updates are the right granularity
+for GPU connectivity maintenance. This module lifts that pattern from a
+single static call to the whole dynamic read/write loop:
+
+  * ``ForestFleet`` stacks T tenant forests array-of-structs: one
+    ``parent[T, n]`` (etc.) per field, one shared (n, capacity) schema,
+    so every per-tenant array lives in one device buffer and one
+    compiled program covers all tenants.
+  * ``apply_batches`` applies one fixed-shape ``(T, B)`` event block —
+    one vmapped ``edge_slots`` + ``apply_batch`` over the tenant axis.
+    Inside, ``apply_batch``'s link ``while_loop`` runs until ALL lanes
+    converge; a converged lane's body is a no-op (``link_components``
+    with an all-False candidate mask changes nothing), so each tenant's
+    result is bit-identical to running it alone (regression-tested in
+    tests/test_fleet.py). The fleet's sync bill for a tick is therefore
+    ``max_t(rounds_t) + 1`` convergence checks, against the sequential
+    loop's ``Σ_t(rounds_t + 1)`` — the §13 amortization headline
+    ``benchmarks/table8_fleet.py`` measures.
+  * ``refresh_tours`` / ``refresh_bccs`` / ``build_fleet_tables`` vmap
+    the §9/§10/§12 cache refreshes the same way; ``FleetQuerySession``
+    serves per-tenant reads over the stacked tables with the per-tenant
+    staleness policies of §12.
+  * ``FleetDispatcher`` (host-side) coalesces each tick's incoming
+    events by tenant into the ``(T, B)`` block, sentinel-padding slots
+    with no traffic; batch units are atomic (never split or merged), so
+    a tenant's applied-batch sequence is exactly its offered sequence.
+  * ``FleetManager`` (host-side) admits sessions to slots and evicts
+    least-recently-used ones when over capacity, checkpointing the
+    evicted forest through the §8 path; re-admission restores it (and
+    its stream cursor) bit-identically.
+
+``launch.serve_fleet`` wires all of it behind the ``ServeConfig`` +
+``FleetConfig`` CLI.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import pathlib
+from functools import partial
+from typing import Any, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import queries as q
+from repro.core.compress import DEFAULT_JUMPS
+from repro.core.euler import TourNumbering, tour_numbering
+from repro.core.queries import QueryTables, build_tables
+from repro.data.streams import StreamBatch
+from repro.dynamic.bcc import (DynamicBCC, _refresh_full,
+                               _refresh_incremental)
+from repro.dynamic.forest import (DynamicForest, apply_batch, edge_slots,
+                                  forest_empty)
+from repro.dynamic.queries import POLICIES, StaleQueryError
+from repro.train import checkpoint as ckpt
+
+
+def tenant_slice(tree, t: int):
+    """Slice tenant ``t`` out of any stacked-leading-axis pytree."""
+    return jax.tree_util.tree_map(lambda x: x[t], tree)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass(frozen=True)
+class ForestFleet:
+    """T tenant forests, array-of-structs, one shared capacity schema.
+
+    Every leaf is the single-tenant ``DynamicForest`` leaf with a
+    leading tenant axis (``parent[T, n]``, ``pool_src[T, C]``, ...),
+    plus ``active[T]`` marking occupied slots. An inactive slot holds an
+    edgeless forest; vmapped updates still run over it (sentinel events
+    on an empty forest are no-ops), keeping every program fixed-shape.
+    """
+
+    n_nodes: int
+    parent: jnp.ndarray
+    rep: jnp.ndarray
+    pool_src: jnp.ndarray
+    pool_dst: jnp.ndarray
+    pool_valid: jnp.ndarray
+    tree_mask: jnp.ndarray
+    dirty: jnp.ndarray
+    version: jnp.ndarray
+    active: jnp.ndarray
+
+    def tree_flatten(self):
+        return ((self.parent, self.rep, self.pool_src, self.pool_dst,
+                 self.pool_valid, self.tree_mask, self.dirty, self.version,
+                 self.active), self.n_nodes)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(aux, *children)
+
+    @property
+    def n_slots(self) -> int:
+        return int(self.parent.shape[0])
+
+    @property
+    def capacity(self) -> int:
+        return int(self.pool_src.shape[1])
+
+    # -- single-tenant views -------------------------------------------------
+
+    def as_forest(self) -> DynamicForest:
+        """The stacked leaves as one ``DynamicForest`` pytree — the
+        vmap carrier (aux ``n_nodes`` is shared by every lane)."""
+        return DynamicForest(
+            n_nodes=self.n_nodes, parent=self.parent, rep=self.rep,
+            pool_src=self.pool_src, pool_dst=self.pool_dst,
+            pool_valid=self.pool_valid, tree_mask=self.tree_mask,
+            dirty=self.dirty, version=self.version)
+
+    def with_forest(self, forest: DynamicForest) -> "ForestFleet":
+        """Re-wrap vmapped-update output, keeping the activity mask."""
+        return ForestFleet(
+            n_nodes=self.n_nodes, parent=forest.parent, rep=forest.rep,
+            pool_src=forest.pool_src, pool_dst=forest.pool_dst,
+            pool_valid=forest.pool_valid, tree_mask=forest.tree_mask,
+            dirty=forest.dirty, version=forest.version, active=self.active)
+
+    def tenant(self, t: int) -> DynamicForest:
+        """Tenant ``t``'s forest, as a standalone ``DynamicForest``."""
+        return tenant_slice(self.as_forest(), t)
+
+    def set_tenant(self, t: int, forest: DynamicForest) -> "ForestFleet":
+        """Install ``forest`` in slot ``t`` (marks it active)."""
+        if forest.n_nodes != self.n_nodes:
+            raise ValueError(f"tenant n_nodes {forest.n_nodes} != fleet "
+                             f"{self.n_nodes}")
+        if forest.capacity != self.capacity:
+            raise ValueError(f"tenant capacity {forest.capacity} != fleet "
+                             f"schema {self.capacity} (one shared "
+                             "capacity per fleet)")
+        stacked = jax.tree_util.tree_map(
+            lambda full, new: full.at[t].set(new),
+            self.as_forest(),
+            DynamicForest(n_nodes=self.n_nodes,
+                          **{f: getattr(forest, f) for f in (
+                              "parent", "rep", "pool_src", "pool_dst",
+                              "pool_valid", "tree_mask", "dirty",
+                              "version")}))
+        out = self.with_forest(stacked)
+        return dataclasses.replace(out, active=out.active.at[t].set(True))
+
+    def clear_tenant(self, t: int) -> "ForestFleet":
+        """Reset slot ``t`` to an edgeless forest (marks it inactive)."""
+        out = self.set_tenant(t, forest_empty(self.n_nodes, self.capacity))
+        return dataclasses.replace(out, active=out.active.at[t].set(False))
+
+
+def fleet_empty(n_slots: int, n_nodes: int, capacity: int) -> ForestFleet:
+    """A fleet of T inactive, edgeless slots."""
+    one = forest_empty(n_nodes, capacity)
+    stacked = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (n_slots,) + x.shape), one)
+    return ForestFleet(
+        n_nodes=n_nodes, parent=stacked.parent, rep=stacked.rep,
+        pool_src=stacked.pool_src, pool_dst=stacked.pool_dst,
+        pool_valid=stacked.pool_valid, tree_mask=stacked.tree_mask,
+        dirty=stacked.dirty, version=stacked.version,
+        active=jnp.zeros((n_slots,), jnp.bool_))
+
+
+# -- the vmapped write path ---------------------------------------------------
+
+def _replay_one(forest: DynamicForest, ins_u, ins_v, del_u, del_v, *,
+                n_jumps: int, use_kernel: bool):
+    dmask, found = edge_slots(forest, del_u, del_v)
+    forest, stats = apply_batch(forest, ins_u, ins_v, dmask,
+                                n_jumps=n_jumps, use_kernel=use_kernel)
+    stats["deletes_found"] = jnp.sum(found.astype(jnp.int32))
+    return forest, stats
+
+
+@partial(jax.jit, static_argnames=("n_jumps", "use_kernel"))
+def apply_batches(fleet: ForestFleet, ins_u: jnp.ndarray,
+                  ins_v: jnp.ndarray, del_u: jnp.ndarray,
+                  del_v: jnp.ndarray, *, n_jumps: int = DEFAULT_JUMPS,
+                  use_kernel: bool = False):
+    """Apply one ``(T, B)`` event block: one vmapped §9 batch per tenant.
+
+    Args:
+      ins_u, ins_v: int32[T, B] per-tenant insertions (``n_nodes``
+        sentinel pads inactive slots — inert, like any padded event).
+      del_u, del_v: int32[T, D] per-tenant deletion pairs (``edge_slots``
+        resolves them to pool slots lane-wise).
+
+    Returns:
+      (fleet', stats) — stats maps the ``apply_batch`` counters (plus
+      ``deletes_found``) to int32[T] arrays. The vmapped link loop runs
+      ``max_t(rounds_t)`` productive rounds; each lane's result is
+      bit-identical to applying its batch alone.
+    """
+    fn = partial(_replay_one, n_jumps=n_jumps, use_kernel=use_kernel)
+    forest, stats = jax.vmap(fn)(fleet.as_forest(), ins_u, ins_v,
+                                 del_u, del_v)
+    return fleet.with_forest(forest), stats
+
+
+def fleet_sync_cost(stats) -> int:
+    """Convergence checks one ``apply_batches`` tick paid: the vmapped
+    link loop trips ``max_t(rounds_t)`` times plus the final all-lanes
+    check — versus ``Σ_t(rounds_t + 1)`` for T sequential calls."""
+    return int(jnp.max(stats["rounds"])) + 1
+
+
+# -- vmapped cache refreshes (§9 tour, §10 BCC, §12 tables) -------------------
+
+def refresh_tours(fleet: ForestFleet, cached: TourNumbering | None = None,
+                  *, incremental: bool = True, use_kernel: bool = False):
+    """Vmapped ``refresh_tour`` over the fleet.
+
+    ``cached`` is the stacked numbering from the previous call (lane t
+    of the result is bit-identical to single-tenant ``refresh_tour`` on
+    tenant t). Returns ``(numbering[T], fleet')`` with all dirty masks
+    cleared.
+    """
+    from repro.dynamic.tour import _merge_dirty
+
+    if cached is None or not incremental:
+        tn = jax.vmap(lambda p: tour_numbering(p, use_kernel=use_kernel))(
+            fleet.parent)
+    else:
+        tn = jax.vmap(lambda p, r, d, c: _merge_dirty(
+            p, r, d, c, use_kernel=use_kernel))(
+                fleet.parent, fleet.rep, fleet.dirty, cached)
+    return tn, dataclasses.replace(
+        fleet, dirty=jnp.zeros_like(fleet.dirty))
+
+
+def refresh_bccs(fleet: ForestFleet, cached: DynamicBCC | None = None, *,
+                 tour: TourNumbering, incremental: bool = True,
+                 use_kernel: bool = False) -> DynamicBCC:
+    """Vmapped ``refresh_bcc`` over the fleet (stacked ``DynamicBCC``)."""
+    forest = fleet.as_forest()
+    if cached is None or not incremental:
+        return jax.vmap(lambda f, t: _refresh_full(
+            f, t, use_kernel=use_kernel))(forest, tour)
+    return jax.vmap(lambda f, t, c: _refresh_incremental(
+        f, t, c, use_kernel=use_kernel))(forest, tour, cached)
+
+
+def build_fleet_tables(tn: TourNumbering, *,
+                       n_jumps: int = DEFAULT_JUMPS) -> QueryTables:
+    """Vmapped §12 ``build_tables``: one stacked query index, built in
+    one program (``build_syncs`` is per-tenant, int32[T])."""
+    return jax.vmap(lambda t: build_tables(t, n_jumps=n_jumps))(tn)
+
+
+# -- per-tenant read sessions over the stacked tables -------------------------
+
+def _i32(x) -> jnp.ndarray:
+    return jnp.atleast_1d(jnp.asarray(x, jnp.int32))
+
+
+@dataclasses.dataclass
+class FleetQuerySession:
+    """Version-stamped read views over every fleet slot (§12, fleet-wide).
+
+    One stacked ``QueryTables`` (built by ``build_fleet_tables`` — all
+    tenants in one vmapped program), per-tenant version stamps, and a
+    per-tenant staleness policy. Query methods take ``(fleet, t, ...)``;
+    the staleness gate is per call and per tenant:
+
+      * ``strict``  — raise ``StaleQueryError``;
+      * ``refresh`` — rebuild ONLY tenant t's slice of the stacked
+        tables (a single-lane tour + ``build_tables``), then answer;
+      * ``stale``   — serve the frozen slice and count it.
+    """
+
+    tables: QueryTables                  # stacked [T, ...]
+    bcc: DynamicBCC | None               # stacked, optional
+    versions: np.ndarray                 # int64[T] stamped fleet versions
+    policies: tuple[str, ...]
+    use_kernel: bool = False
+    n_jumps: int = DEFAULT_JUMPS
+    # per-tenant telemetry (host-side)
+    builds: np.ndarray = None
+    build_syncs_total: np.ndarray = None
+    stale_served: np.ndarray = None
+    auto_refreshes: np.ndarray = None
+
+    @classmethod
+    def from_fleet(cls, fleet: ForestFleet,
+                   tn: TourNumbering | None = None,
+                   bcc: DynamicBCC | None = None, *,
+                   policy: str | Sequence[str] = "strict",
+                   use_kernel: bool = False,
+                   n_jumps: int = DEFAULT_JUMPS) -> "FleetQuerySession":
+        t_slots = fleet.n_slots
+        if isinstance(policy, str):
+            policies = (policy,) * t_slots
+        else:
+            policies = tuple(policy)
+        if len(policies) != t_slots:
+            raise ValueError(f"{len(policies)} policies for {t_slots} slots")
+        for p in policies:
+            if p not in POLICIES:
+                raise ValueError(f"policy {p!r} not in {POLICIES}")
+        if tn is None:
+            tn, _ = refresh_tours(fleet, incremental=False,
+                                  use_kernel=use_kernel)
+        tables = build_fleet_tables(tn, n_jumps=n_jumps)
+        sess = cls(tables=tables, bcc=bcc,
+                   versions=np.asarray(fleet.version, np.int64).copy(),
+                   policies=policies, use_kernel=use_kernel,
+                   n_jumps=n_jumps,
+                   builds=np.ones(t_slots, np.int64),
+                   build_syncs_total=np.asarray(tables.build_syncs,
+                                                np.int64).copy(),
+                   stale_served=np.zeros(t_slots, np.int64),
+                   auto_refreshes=np.zeros(t_slots, np.int64))
+        return sess
+
+    # -- lifecycle -----------------------------------------------------------
+
+    def rebuild_tenant(self, fleet: ForestFleet, t: int) -> None:
+        """Re-index ONE tenant: single-lane tour + tables, scattered
+        into the stacked index with ``.at[t].set`` (other lanes frozen)."""
+        tn_t = tour_numbering(fleet.parent[t], use_kernel=self.use_kernel)
+        tab_t = build_tables(tn_t, n_jumps=self.n_jumps)
+        self.tables = jax.tree_util.tree_map(
+            lambda full, new: full.at[t].set(new), self.tables, tab_t)
+        if self.bcc is not None:
+            bcc_t = _refresh_full(fleet.tenant(t), tn_t,
+                                  use_kernel=self.use_kernel)
+            self.bcc = jax.tree_util.tree_map(
+                lambda full, new: full.at[t].set(new), self.bcc, bcc_t)
+        self.versions[t] = int(fleet.version[t])
+        self.builds[t] += 1
+        self.build_syncs_total[t] += int(tab_t.build_syncs)
+
+    def restamp(self, fleet: ForestFleet, tn: TourNumbering,
+                bcc: DynamicBCC | None = None) -> None:
+        """Adopt freshly vmapped caches for the whole fleet (the cadence
+        path: the serving loop refreshed every lane in one program)."""
+        self.tables = build_fleet_tables(tn, n_jumps=self.n_jumps)
+        self.bcc = bcc
+        self.versions = np.asarray(fleet.version, np.int64).copy()
+        self.builds += 1
+        self.build_syncs_total += np.asarray(self.tables.build_syncs,
+                                             np.int64)
+
+    def is_fresh(self, fleet: ForestFleet, t: int) -> bool:
+        return int(fleet.version[t]) == int(self.versions[t])
+
+    def ensure(self, fleet: ForestFleet, t: int) -> None:
+        if self.is_fresh(fleet, t):
+            return
+        policy = self.policies[t]
+        if policy == "stale":
+            self.stale_served[t] += 1
+            return
+        if policy == "strict":
+            raise StaleQueryError(
+                f"tenant {t} at version {int(fleet.version[t])}, session "
+                f"slice stamped {int(self.versions[t])}: refresh the "
+                "fleet caches first (or use policy='refresh' / 'stale')")
+        self.auto_refreshes[t] += 1
+        self.rebuild_tenant(fleet, t)
+
+    # -- per-tenant query ops (gathers over one slice of the stack) ----------
+
+    def _tab(self, t: int) -> QueryTables:
+        return tenant_slice(self.tables, t)
+
+    def connected(self, fleet, t: int, u, v) -> jnp.ndarray:
+        self.ensure(fleet, t)
+        return q.connected(self._tab(t), _i32(u), _i32(v))
+
+    def depth(self, fleet, t: int, v) -> jnp.ndarray:
+        self.ensure(fleet, t)
+        return q.depth_of(self._tab(t), _i32(v))
+
+    def lca(self, fleet, t: int, u, v) -> jnp.ndarray:
+        self.ensure(fleet, t)
+        return q.lca(self._tab(t), _i32(u), _i32(v))
+
+    def is_ancestor(self, fleet, t: int, a, x) -> jnp.ndarray:
+        self.ensure(fleet, t)
+        return q.is_ancestor(self._tab(t), _i32(a), _i32(x))
+
+    def is_bridge(self, fleet, t: int, u, v) -> jnp.ndarray:
+        self.ensure(fleet, t)
+        if self.bcc is None:
+            raise ValueError("session built without biconnectivity labels "
+                             "— pass bcc=refresh_bccs(...) to from_fleet")
+        b = tenant_slice(self.bcc, t)
+        cap = b.pool_src.shape[0]
+        _hit, flagged = q.edge_membership(
+            _i32(u), _i32(v), b.pool_src, b.pool_dst, b.pool_valid,
+            b.bridge[:cap])
+        return flagged
+
+    def is_articulation(self, fleet, t: int, v) -> jnp.ndarray:
+        self.ensure(fleet, t)
+        if self.bcc is None:
+            raise ValueError("session built without biconnectivity labels "
+                             "— pass bcc=refresh_bccs(...) to from_fleet")
+        b = tenant_slice(self.bcc, t)
+        vq = _i32(v)
+        n = b.articulation.shape[0]
+        return ((vq >= 0) & (vq < n)
+                & b.articulation[jnp.clip(vq, 0, n - 1)])
+
+    # -- telemetry -----------------------------------------------------------
+
+    def sync_stats(self, t: int | None = None) -> dict:
+        """§12 amortization counters — one tenant's, or fleet totals."""
+        pick = (lambda a: int(a[t])) if t is not None else \
+            (lambda a: int(a.sum()))
+        return {"builds": pick(self.builds),
+                "build_syncs_total": pick(self.build_syncs_total),
+                "stale_served": pick(self.stale_served),
+                "auto_refreshes": pick(self.auto_refreshes)}
+
+
+# -- host-side dispatch + admission -------------------------------------------
+
+class FleetDispatcher:
+    """Coalesces incoming per-tenant batches into ``(T, B)`` tick blocks.
+
+    Host-side. Tenants ``offer`` fixed-shape ``StreamBatch`` units (the
+    §9 contract: sentinel-padded, one shape per stream); each ``tick``
+    pops AT MOST ONE unit per resident tenant — units are atomic, never
+    split across ticks or merged within one, so every tenant's applied
+    sequence equals its offered sequence (the fleet-replay equivalence
+    invariant). Slots with no resident or no queued unit get all-sentinel
+    rows: inert under ``apply_batches`` except the unconditional version
+    bump, which the admission checkpoint path hides (an evicted tenant's
+    clock restarts from its restored stamp).
+    """
+
+    def __init__(self, n_nodes: int, batch: int):
+        self.n_nodes = int(n_nodes)
+        self.batch = int(batch)
+        self.queues: dict[Any, collections.deque] = \
+            collections.defaultdict(collections.deque)
+        self.offered = collections.Counter()
+        self.served = collections.Counter()
+
+    def offer(self, tenant, b: StreamBatch) -> None:
+        for arr in (b.ins_u, b.ins_v, b.del_u, b.del_v):
+            if arr.shape != (self.batch,):
+                raise ValueError(
+                    f"batch unit shape {arr.shape} != ({self.batch},) — "
+                    "the fleet block is fixed-shape; regenerate the "
+                    "stream with the fleet's batch size")
+        self.queues[tenant].append(b)
+        self.offered[tenant] += 1
+
+    def pending(self, tenant=None) -> int:
+        if tenant is not None:
+            return len(self.queues[tenant])
+        return sum(len(d) for d in self.queues.values())
+
+    def tick(self, tenant_at: Sequence[Any]):
+        """Build one tick block for the current residency map.
+
+        Args:
+          tenant_at: per-slot resident tenant id (``None`` = empty slot).
+
+        Returns:
+          ((ins_u, ins_v, del_u, del_v) int32[T, B] device arrays,
+           served: {tenant: event count} for the units dispatched).
+        """
+        t_slots, n, b = len(tenant_at), self.n_nodes, self.batch
+        ins_u = np.full((t_slots, b), n, np.int32)
+        ins_v = np.full((t_slots, b), n, np.int32)
+        del_u = np.full((t_slots, b), n, np.int32)
+        del_v = np.full((t_slots, b), n, np.int32)
+        served: dict[Any, int] = {}
+        for s, tenant in enumerate(tenant_at):
+            if tenant is None or not self.queues[tenant]:
+                continue
+            unit = self.queues[tenant].popleft()
+            ins_u[s], ins_v[s] = unit.ins_u, unit.ins_v
+            del_u[s], del_v[s] = unit.del_u, unit.del_v
+            served[tenant] = int((unit.ins_u < n).sum()
+                                 + (unit.del_u < n).sum())
+            self.served[tenant] += 1
+        return ((jnp.asarray(ins_u), jnp.asarray(ins_v),
+                 jnp.asarray(del_u), jnp.asarray(del_v)), served)
+
+
+class FleetManager:
+    """Session admission/eviction against the fleet's slot capacity.
+
+    Host-side bookkeeping around a ``ForestFleet``: which tenant lives
+    in which slot, LRU order, and per-tenant stream cursors. When every
+    slot is occupied, ``ensure`` evicts the least-recently-used resident
+    through the §8 checkpoint path (forest + cursor, atomic publish);
+    re-admission restores bit-identically — eviction is invisible to the
+    tenant's replayed history (regression-tested).
+    """
+
+    def __init__(self, fleet: ForestFleet, ckpt_dir: str | pathlib.Path):
+        self.fleet = fleet
+        self.ckpt_dir = pathlib.Path(ckpt_dir)
+        self.slot_of: dict[Any, int] = {}
+        self.tenant_at: list[Any] = [None] * fleet.n_slots
+        self.last_used = [-1] * fleet.n_slots
+        self.clock = 0
+        self.cursors = collections.Counter()   # tenant → applied batches
+        self.admissions = 0
+        self.evictions = 0
+        self.restores = 0
+
+    def _tenant_dir(self, tenant) -> pathlib.Path:
+        return self.ckpt_dir / f"tenant_{tenant}"
+
+    def touch(self, tenant) -> None:
+        self.clock += 1
+        self.last_used[self.slot_of[tenant]] = self.clock
+
+    def ensure(self, tenant) -> int:
+        """Make ``tenant`` resident; returns its slot (LRU-evicting if
+        the fleet is full)."""
+        if tenant in self.slot_of:
+            self.touch(tenant)
+            return self.slot_of[tenant]
+        free = [s for s, occupant in enumerate(self.tenant_at)
+                if occupant is None]
+        if free:
+            slot = free[0]
+        else:
+            slot = min(range(len(self.last_used)),
+                       key=lambda s: self.last_used[s])
+            self.evict(self.tenant_at[slot])
+        self._admit(tenant, slot)
+        return slot
+
+    def evict(self, tenant) -> None:
+        """Checkpoint ``tenant``'s forest + cursor and free its slot."""
+        slot = self.slot_of.pop(tenant)
+        ckpt.save(self._tenant_dir(tenant),
+                  {"forest": self.fleet.tenant(slot)},
+                  step=self.clock, data_cursor=int(self.cursors[tenant]),
+                  keep=1)
+        self.fleet = self.fleet.clear_tenant(slot)
+        self.tenant_at[slot] = None
+        self.last_used[slot] = -1
+        self.evictions += 1
+
+    def _admit(self, tenant, slot: int) -> None:
+        fresh = {"forest": forest_empty(self.fleet.n_nodes,
+                                        self.fleet.capacity)}
+        if ckpt.latest_step(self._tenant_dir(tenant)) is not None:
+            restored, manifest = ckpt.restore(self._tenant_dir(tenant),
+                                              fresh)
+            self.cursors[tenant] = int(manifest["data_cursor"])
+            forest = restored["forest"]
+            self.restores += 1
+        else:
+            forest = fresh["forest"]
+        self.fleet = self.fleet.set_tenant(slot, forest)
+        self.slot_of[tenant] = slot
+        self.tenant_at[slot] = tenant
+        self.admissions += 1
+        self.touch(tenant)
+
+    def note_applied(self, served: dict) -> None:
+        """Advance stream cursors after a tick (one unit per tenant)."""
+        for tenant in served:
+            self.cursors[tenant] += 1

@@ -71,6 +71,11 @@ def refresh_tour(state: DynamicForest,
                  incremental: bool = True, use_kernel: bool = False):
     """Refresh the tour numbering after one or more ``apply_batch`` calls.
 
+    Deprecated thin wrapper: the canonical entry is
+    ``dynamic.view.refresh_tour_once`` (or, for cadenced serving loops,
+    ``dynamic.view.ForestView.refresh``). Kept so existing callers and
+    the table4 ablation keep working unchanged.
+
     Args:
       state: the dynamic forest (its ``dirty`` mask names the components
         whose tree changed since ``cached`` was computed).
@@ -84,9 +89,7 @@ def refresh_tour(state: DynamicForest,
       (numbering, state') — state' has its dirty mask cleared; pass it
       (and the numbering) to the next refresh.
     """
-    if cached is None or not incremental:
-        tn = tour_numbering(state.parent, use_kernel=use_kernel)
-        return tn, _clear_dirty(state)
-    tn = _merge_dirty(state.parent, state.rep, state.dirty, cached,
-                      use_kernel=use_kernel)
-    return tn, _clear_dirty(state)
+    from repro.dynamic.view import refresh_tour_once
+
+    return refresh_tour_once(state, cached, incremental=incremental,
+                             use_kernel=use_kernel)

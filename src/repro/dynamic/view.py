@@ -1,0 +1,222 @@
+"""Unified refresh surface for the forest's derived caches (DESIGN.md §13).
+
+Before this module, the three derived read structures of a
+``DynamicForest`` — the Euler-tour numbering (§9), the biconnectivity
+labels (§10), and the ``QuerySession`` read view (§12) — were refreshed
+by three call sites with inconsistent keyword signatures, and every
+serving loop re-implemented the same cadence bookkeeping ("is this the
+k-th batch?") and dirty checks around them. ``ForestView`` folds that
+behind one entry:
+
+    view = ForestView(CadencePolicy(tour="incremental", bcc="incremental",
+                                    every=4))
+    state = view.prime(state)            # initial cache build
+    ...
+    state = view.refresh(state, step=i)  # cadenced: no-op off-cadence
+    state = view.refresh(state)          # forced: refresh everything on
+
+``CadencePolicy`` is the single cadence policy object: which caches are
+maintained (``tour``/``bcc`` modes, ``queries``), how often (``every``),
+and the query-staleness policy between refreshes. ``refresh`` accepts
+per-call overrides (``tour=``, ``bcc=``, ``queries=``) for out-of-cadence
+work — e.g. a recovery path forcing a tour rebuild without touching BCC.
+
+The old entry points ``dynamic.tour.refresh_tour`` and
+``dynamic.bcc.refresh_bcc`` remain as thin deprecated wrappers over the
+one-shot functions here (``refresh_tour_once`` / ``refresh_bcc_once``)
+so existing callers keep working; new code should hold a ``ForestView``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+
+from repro.core.euler import TourNumbering, tour_numbering
+from repro.dynamic.bcc import (DynamicBCC, _refresh_full,
+                               _refresh_incremental)
+from repro.dynamic.forest import DynamicForest
+from repro.dynamic.tour import _clear_dirty, _merge_dirty
+
+_MODES = ("incremental", "full", "off")
+_STALENESS = ("strict", "refresh", "stale")
+
+
+@dataclasses.dataclass(frozen=True)
+class CadencePolicy:
+    """Which derived caches are maintained, and on what cadence.
+
+    Attributes:
+      tour:      tour-numbering mode — ``incremental`` (§9 dirty-scoped
+                 merge), ``full`` (ablation), ``off``.
+      bcc:       biconnectivity mode (§10), same values.
+      queries:   also maintain a ``QuerySession`` at the cadence (§12).
+      every:     refresh after every k-th batch (0 disables cadenced
+                 refreshes; forced refreshes still work).
+      staleness: ``QuerySession`` policy between refreshes.
+    """
+
+    tour: str = "incremental"
+    bcc: str = "off"
+    queries: bool = False
+    every: int = 4
+    staleness: str = "stale"
+
+    def __post_init__(self):
+        if self.tour not in _MODES:
+            raise ValueError(f"tour mode {self.tour!r} not in {_MODES}")
+        if self.bcc not in _MODES:
+            raise ValueError(f"bcc mode {self.bcc!r} not in {_MODES}")
+        if self.staleness not in _STALENESS:
+            raise ValueError(
+                f"staleness {self.staleness!r} not in {_STALENESS}")
+
+    def due(self, step: int | None) -> bool:
+        """True when the cadence lands at 0-based batch index ``step``
+        (``None`` = forced, always due)."""
+        if step is None:
+            return True
+        return self.every > 0 and (step + 1) % self.every == 0
+
+
+def refresh_tour_once(state: DynamicForest,
+                      cached: TourNumbering | None = None, *,
+                      incremental: bool = True, use_kernel: bool = False):
+    """One tour refresh (the §9 step; canonical home of the logic).
+
+    ``None``/``incremental=False`` recompute from scratch; otherwise the
+    dirty-scoped merge — bit-identical either way. Returns
+    ``(numbering, state')`` with the dirty mask cleared.
+    """
+    if cached is None or not incremental:
+        tn = tour_numbering(state.parent, use_kernel=use_kernel)
+        return tn, _clear_dirty(state)
+    tn = _merge_dirty(state.parent, state.rep, state.dirty, cached,
+                      use_kernel=use_kernel)
+    return tn, _clear_dirty(state)
+
+
+def refresh_bcc_once(state: DynamicForest,
+                     cached: DynamicBCC | None = None, *,
+                     tour: TourNumbering | None = None,
+                     incremental: bool = True,
+                     use_kernel: bool = False) -> DynamicBCC:
+    """One biconnectivity refresh (the §10 step; canonical home)."""
+    tn = tour if tour is not None else tour_numbering(
+        state.parent, use_kernel=use_kernel)
+    if cached is None or not incremental:
+        return _refresh_full(state, tn, use_kernel=use_kernel)
+    return _refresh_incremental(state, tn, cached, use_kernel=use_kernel)
+
+
+@dataclasses.dataclass
+class ForestView:
+    """The derived-cache bundle of one forest, refreshed as a unit.
+
+    Owns the tour numbering, the BCC labels, and (when the policy asks)
+    the ``QuerySession`` — plus the refresh-latency telemetry serving
+    loops report. Host-side mutable (like the loops that hold it), NOT
+    a pytree; the caches it owns are.
+    """
+
+    policy: CadencePolicy = dataclasses.field(default_factory=CadencePolicy)
+    use_kernel: bool = False
+    tn: TourNumbering | None = None
+    bcc: DynamicBCC | None = None
+    session: Any = None                   # dynamic.queries.QuerySession
+    tour_lat: list = dataclasses.field(default_factory=list)
+    bcc_lat: list = dataclasses.field(default_factory=list)
+    _tn_adopted: Any = None               # tn the session was built over
+
+    @property
+    def maintains_caches(self) -> bool:
+        return self.policy.tour != "off" or self.policy.bcc != "off"
+
+    def prime(self, state: DynamicForest) -> DynamicForest:
+        """Initial cache build — fixes the checkpoint pytree structure
+        up front (a maintained cache exists from step 0). BCC-only
+        policies still get a tour numbering (§10 needs one)."""
+        if self.maintains_caches:
+            state = self.refresh(state, tour=True)
+        return state
+
+    def refresh(self, state: DynamicForest, *, step: int | None = None,
+                tour: bool | None = None, bcc: bool | None = None,
+                queries: bool | None = None) -> DynamicForest:
+        """Refresh every cache that is (a) on and (b) due at ``step``.
+
+        ``step=None`` forces the refresh (cadence bypassed). ``tour`` /
+        ``bcc`` / ``queries`` override the policy's on/off per call
+        (``True`` forces a normally-off cache using the incremental
+        mode, ``False`` skips a normally-on one). Returns the state with
+        its dirty mask cleared iff the tour refreshed.
+        """
+        if not self.policy.due(step):
+            return state
+        do_tour = (self.policy.tour != "off") if tour is None else tour
+        do_bcc = (self.policy.bcc != "off") if bcc is None else bcc
+        do_q = self.policy.queries if queries is None else queries
+
+        if do_tour:
+            t0 = time.perf_counter()
+            mode = self.policy.tour if self.policy.tour != "off" \
+                else "incremental"
+            self.tn, state = refresh_tour_once(
+                state, self.tn, incremental=(mode == "incremental"),
+                use_kernel=self.use_kernel)
+            jax.block_until_ready(self.tn.pre)
+            self.tour_lat.append(time.perf_counter() - t0)
+        if do_bcc:
+            t0 = time.perf_counter()
+            mode = self.policy.bcc if self.policy.bcc != "off" \
+                else "incremental"
+            self.bcc = refresh_bcc_once(
+                state, self.bcc, tour=self.tn,
+                incremental=(mode == "incremental"),
+                use_kernel=self.use_kernel)
+            jax.block_until_ready(self.bcc.edge_bcc)
+            self.bcc_lat.append(time.perf_counter() - t0)
+        if do_q:
+            self.adopt_session(state)
+        return state
+
+    # -- query-session adoption (the §12 rebuild, folded here) ---------------
+
+    def adopt_session(self, state: DynamicForest):
+        """(Re)build the ``QuerySession`` over the current caches.
+
+        The dirty check is object identity on ``tn`` — a session adopts
+        the exact numbering object the view holds; any tour refresh
+        produces a new object and triggers re-adoption. Between
+        refreshes the session's own staleness policy governs (that's the
+        §12 contract — adoption must NOT rebuild per version bump).
+        Falls back to a tour-only session when the caches don't match
+        the live state mid-interval (e.g. a caller forcing a session
+        before the first cadenced refresh). Sync/staleness counters
+        carry across generations, so ``session.sync_stats()`` is
+        cumulative for the run.
+        """
+        from repro.dynamic.queries import QuerySession
+
+        if self.session is not None and self._tn_adopted is self.tn:
+            return self.session
+        carry = self.session.sync_stats() if self.session is not None \
+            else None
+        try:
+            sess = QuerySession.from_state(
+                state, self.tn, self.bcc, policy=self.policy.staleness,
+                use_kernel=self.use_kernel)
+        except ValueError:
+            sess = QuerySession.from_state(
+                state, policy=self.policy.staleness,
+                use_kernel=self.use_kernel)
+        if carry is not None:
+            sess.builds += carry["builds"]
+            sess.build_syncs_total += carry["build_syncs_total"]
+            sess.stale_served += carry["stale_served"]
+            sess.auto_refreshes += carry["auto_refreshes"]
+        self.session = sess
+        self._tn_adopted = self.tn
+        return sess

@@ -51,8 +51,7 @@ from repro.dynamic.audit import audit_forest
 from repro.dynamic.chaos import INJECTORS, merge_quarantine, sanitize_batch
 from repro.dynamic.recovery import recover
 from repro.dynamic.replay import init_state, replay_batch
-from repro.dynamic.tour import refresh_tour
-from repro.dynamic.bcc import refresh_bcc
+from repro.dynamic.view import CadencePolicy, ForestView
 from repro.train import checkpoint as ckpt
 from repro.train.fault import StepTimeout
 
@@ -71,8 +70,7 @@ class ResilientStreamLoop:
     """
 
     state: Any                               # DynamicForest
-    tn: Any = None                           # TourNumbering | None
-    bcc: Any = None                          # DynamicBCC | None
+    view: ForestView | None = None           # built in __post_init__
 
     tour_mode: str = "incremental"           # incremental | full | off
     bcc_mode: str = "off"                    # incremental | full | off
@@ -102,8 +100,6 @@ class ResilientStreamLoop:
     dropped_unmatched: int = 0
     retries: int = 0
     lat: list = dataclasses.field(default_factory=list)
-    tour_lat: list = dataclasses.field(default_factory=list)
-    bcc_lat: list = dataclasses.field(default_factory=list)
     stragglers: list = dataclasses.field(default_factory=list)
     quarantine: dict = dataclasses.field(default_factory=dict)
     injected: list = dataclasses.field(default_factory=list)
@@ -115,6 +111,37 @@ class ResilientStreamLoop:
     def __post_init__(self):
         if self.apply_fn is None:
             self.apply_fn = replay_batch
+        if self.view is None:
+            self.view = ForestView(
+                CadencePolicy(tour=self.tour_mode, bcc=self.bcc_mode,
+                              every=self.tour_every),
+                use_kernel=self.use_kernel)
+
+    # -- the derived caches + their telemetry live on the ForestView ---------
+
+    @property
+    def tn(self):
+        return self.view.tn
+
+    @tn.setter
+    def tn(self, value):
+        self.view.tn = value
+
+    @property
+    def bcc(self):
+        return self.view.bcc
+
+    @bcc.setter
+    def bcc(self, value):
+        self.view.bcc = value
+
+    @property
+    def tour_lat(self) -> list:
+        return self.view.tour_lat
+
+    @property
+    def bcc_lat(self) -> list:
+        return self.view.bcc_lat
 
     # ---- construction ------------------------------------------------------
 
@@ -125,13 +152,25 @@ class ResilientStreamLoop:
         loop = cls(state=state, **config)
         # Fix the checkpoint pytree structure up front: when maintenance
         # is on, the caches exist from step 0.
-        if loop.tour_mode != "off" or loop.bcc_mode != "off":
-            loop.tn, loop.state = refresh_tour(
-                loop.state, None, use_kernel=loop.use_kernel)
-        if loop.bcc_mode != "off":
-            loop.bcc = refresh_bcc(loop.state, None, tour=loop.tn,
-                                   use_kernel=loop.use_kernel)
+        loop.state = loop.view.prime(loop.state)
         return loop
+
+    @classmethod
+    def from_config(cls, stream: EdgeStream, cfg,
+                    capacity: int | None = None,
+                    **overrides) -> "ResilientStreamLoop":
+        """Build from a ``launch.config.ServeConfig`` (the typed flag
+        schema) instead of loose kwargs."""
+        injectors = cfg.injector_names(INJECTORS)
+        return cls.from_stream(
+            stream, capacity,
+            tour_mode=cfg.refresh.tour, bcc_mode=cfg.refresh.bcc,
+            tour_every=cfg.refresh.tour_every,
+            ckpt_dir=cfg.ckpt.ckpt_dir, ckpt_every=cfg.ckpt.ckpt_every,
+            audit_every=cfg.chaos.audit_every, chaos=injectors,
+            chaos_every=cfg.chaos.chaos_every,
+            chaos_seed=cfg.chaos.chaos_seed, sanitize=cfg.chaos.sanitize,
+            **overrides)
 
     # ---- checkpointing -----------------------------------------------------
 
@@ -268,22 +307,9 @@ class ResilientStreamLoop:
             self.stragglers.append((step, dt, self._ewma))
         self._ewma = 0.9 * self._ewma + 0.1 * dt
 
-        if self.tour_mode != "off" and (step + 1) % self.tour_every == 0:
-            t0 = time.perf_counter()
-            self.tn, self.state = refresh_tour(
-                self.state, self.tn,
-                incremental=(self.tour_mode == "incremental"),
-                use_kernel=self.use_kernel)
-            jax.block_until_ready(self.tn.pre)
-            self.tour_lat.append(time.perf_counter() - t0)
-        if self.bcc_mode != "off" and (step + 1) % self.tour_every == 0:
-            t0 = time.perf_counter()
-            self.bcc = refresh_bcc(
-                self.state, self.bcc, tour=self.tn,
-                incremental=(self.bcc_mode == "incremental"),
-                use_kernel=self.use_kernel)
-            jax.block_until_ready(self.bcc.edge_bcc)
-            self.bcc_lat.append(time.perf_counter() - t0)
+        # Cadenced cache maintenance: one ForestView entry refreshes
+        # whatever the policy keeps on (tour, BCC) when the step is due.
+        self.state = self.view.refresh(self.state, step=step)
 
         if self.audit_every and (step + 1) % self.audit_every == 0:
             self._recover(step)

@@ -1,0 +1,261 @@
+"""Multi-tenant fleet serving loop: T session graphs, one process.
+
+    PYTHONPATH=src python -m repro.launch.serve_fleet \
+        --graph grid_64 --stream churn --batch 64 --steps 32 \
+        --tenants 6 --slots 4
+
+The fleet-wide counterpart of ``serve_stream`` (DESIGN.md §13): each
+*tenant* is an independent session graph driven by its own edge stream
+(same generator, per-tenant seed ``--seed + t``). Per tick the
+``FleetDispatcher`` coalesces one queued batch unit per resident tenant
+into a fixed-shape ``(T, B)`` event block and ``apply_batches`` applies
+it with ONE vmapped §9 program — the fleet pays ``max_t(rounds_t) + 1``
+convergence syncs where T sequential loops would pay
+``Σ_t(rounds_t + 1)``. Cache refreshes (tour, optional BCC, the stacked
+``QueryTables``) are vmapped the same way at ``--tour-every`` cadence,
+and reads are served per tenant by a ``FleetQuerySession`` under the
+``--query-staleness`` policy.
+
+When ``--tenants`` exceeds ``--slots``, residency rotates round-robin:
+admission evicts the least-recently-used resident through the §8
+checkpoint path (forest + stream cursor, atomic publish) and
+re-admission restores bit-identically, so eviction is invisible to a
+tenant's stream history (tests/test_fleet.py proves equality against T
+independent single-tenant loops).
+
+Flags are the shared ``ServeConfig`` schema plus the ``FleetConfig``
+group (``--tenants``, ``--slots``, ``--evict-dir``); the report prints
+per-tenant applied-events/sec, batch/query latency percentiles, and the
+fleet-vs-sequential sync accounting that ``benchmarks/table8_fleet.py``
+turns into the §13 headline numbers.
+"""
+from __future__ import annotations
+
+import argparse
+import tempfile
+import time
+
+import numpy as np
+
+
+def _percentiles(samples, unit_ms=1e3) -> str:
+    if not len(samples):
+        return "no samples"
+    ms = np.asarray(samples) * unit_ms
+    return f"p50 {np.percentile(ms, 50):6.2f} ms  p95 " \
+           f"{np.percentile(ms, 95):6.2f} ms"
+
+
+def main(argv=None) -> None:
+    from repro.launch.config import FleetConfig, ServeConfig
+
+    ap = argparse.ArgumentParser(
+        description="multi-tenant batch-dynamic serving loop "
+                    "(DESIGN.md §13)")
+    ServeConfig.add_args(ap)
+    FleetConfig.add_args(ap)
+    args = ap.parse_args(argv)
+    try:
+        cfg = ServeConfig.from_args(args).check()
+        fcfg = FleetConfig.from_args(args).check()
+    except ValueError as e:
+        ap.error(str(e))
+
+    import jax
+
+    from repro.data.graphs import SUITE
+    from repro.data.streams import STREAMS
+    from repro.dynamic.fleet import (FleetDispatcher, FleetManager,
+                                     FleetQuerySession, apply_batches,
+                                     build_fleet_tables, fleet_empty,
+                                     fleet_sync_cost, refresh_bccs,
+                                     refresh_tours)
+    from repro.dynamic.replay import stream_capacity
+
+    factory, kwargs, regime = SUITE[cfg.stream.graph]
+    g = factory(**kwargs)
+    n = g.n_nodes
+
+    # Per-tenant streams: same workload shape, decorrelated seeds. The
+    # initially-live edges ride the dispatcher as batch 0 (insert-only),
+    # so every tenant's history replays through the same (T, B) path.
+    streams = []
+    for t in range(fcfg.tenants):
+        kw = dict(cfg.stream_kwargs())
+        kw["seed"] = cfg.stream.seed + t
+        streams.append(STREAMS[cfg.stream.stream](g, **kw))
+    capacity = max(stream_capacity(s) for s in streams)
+    n_slots = min(fcfg.slots, fcfg.tenants)
+    steps = min(cfg.stream.steps, min(len(s.batches) for s in streams))
+
+    evict_dir = fcfg.evict_dir or tempfile.mkdtemp(prefix="fleet_evict_")
+    fleet = fleet_empty(n_slots, n, capacity)
+    manager = FleetManager(fleet, evict_dir)
+    dispatcher = FleetDispatcher(n, cfg.stream.batch)
+
+    from repro.data.streams import StreamBatch
+    for t, stream in enumerate(streams):
+        if stream.init_u.shape[0]:
+            b = cfg.stream.batch
+            for off in range(0, stream.init_u.shape[0], b):
+                iu = np.full(b, n, np.int32)
+                iv = np.full(b, n, np.int32)
+                chunk = stream.init_u[off:off + b]
+                iu[:chunk.shape[0]] = chunk
+                iv[:chunk.shape[0]] = stream.init_v[off:off + b]
+                dispatcher.offer(t, StreamBatch(
+                    ins_u=iu, ins_v=iv,
+                    del_u=np.full(b, n, np.int32),
+                    del_v=np.full(b, n, np.int32)))
+        for batch in stream.batches[:steps]:
+            dispatcher.offer(t, batch)
+
+    print(f"graph {cfg.stream.graph} ({regime}): V={n} E={g.n_edges}; "
+          f"stream {cfg.stream.stream}, batch={cfg.stream.batch}, "
+          f"{steps} batches x {fcfg.tenants} tenants in {n_slots} slots "
+          f"(capacity {capacity}), tour={cfg.refresh.tour}, "
+          f"bcc={cfg.refresh.bcc}")
+
+    tn = None
+    bcc = None
+    sess = None
+    cadence = cfg.cadence()
+    applied = {t: 0 for t in range(fcfg.tenants)}
+    batch_lat: dict[int, list] = {t: [] for t in range(fcfg.tenants)}
+    query_lat: dict[int, list] = {t: [] for t in range(fcfg.tenants)}
+    sync_fleet = 0
+    sync_seq_equiv = 0
+    refresh_lat: list = []
+    rng = np.random.default_rng(cfg.stream.seed + 104729)
+    payload_reads = cfg.read.read_ratio > 0
+    read_per_tick = 0.0
+    if payload_reads:
+        r = cfg.read.read_ratio
+        read_per_tick = r / (1.0 - r) * cfg.stream.batch / cfg.read.read_batch
+    read_debt = {t: 0.0 for t in range(fcfg.tenants)}
+
+    t_loop = time.perf_counter()
+    tick = 0
+    while dispatcher.pending():
+        # Residency: every tenant with queued traffic gets a slot this
+        # tick if one is free; otherwise LRU eviction rotates them in.
+        waiting = [t for t in range(fcfg.tenants) if dispatcher.pending(t)]
+        for t in waiting[:n_slots]:
+            manager.ensure(t)
+        fleet = manager.fleet
+
+        (iu, iv, du, dv), served = dispatcher.tick(manager.tenant_at)
+        t0 = time.perf_counter()
+        fleet, stats = apply_batches(fleet, iu, iv, du, dv)
+        jax.block_until_ready(fleet.parent)
+        dt = time.perf_counter() - t0
+        manager.fleet = fleet
+        manager.note_applied(served)
+
+        rounds = np.asarray(stats["rounds"])
+        sync_fleet += fleet_sync_cost(stats)
+        overflow = np.asarray(stats["overflow"])
+        found = np.asarray(stats["deletes_found"])
+        for tenant, events in served.items():
+            slot = manager.slot_of[tenant]
+            sync_seq_equiv += int(rounds[slot]) + 1
+            ins = int((np.asarray(iu[slot]) < n).sum())
+            applied[tenant] += (ins - int(overflow[slot])
+                                + int(found[slot]))
+            batch_lat[tenant].append(dt)
+
+        if cadence.tour != "off" and cadence.due(tick):
+            t0 = time.perf_counter()
+            tn, fleet = refresh_tours(
+                fleet, tn, incremental=(cadence.tour == "incremental"))
+            if cadence.bcc != "off":
+                bcc = refresh_bccs(
+                    fleet, bcc, tour=tn,
+                    incremental=(cadence.bcc == "incremental"))
+            jax.block_until_ready(tn.pre)
+            refresh_lat.append(time.perf_counter() - t0)
+            manager.fleet = fleet
+            if payload_reads:
+                if sess is None:
+                    sess = FleetQuerySession.from_fleet(
+                        fleet, tn, bcc, policy=cfg.read.query_staleness)
+                else:
+                    sess.restamp(fleet, tn, bcc)
+
+        if payload_reads and sess is not None:
+            from repro.dynamic.queries import StaleQueryError
+            for tenant in served:
+                slot = manager.slot_of[tenant]
+                read_debt[tenant] += read_per_tick
+                while read_debt[tenant] >= 1.0:
+                    read_debt[tenant] -= 1.0
+                    u = rng.integers(0, n, cfg.read.read_batch)
+                    v = rng.integers(0, n, cfg.read.read_batch)
+                    t0 = time.perf_counter()
+                    try:
+                        out = sess.lca(fleet, slot, u, v) \
+                            if tick % 2 else sess.connected(fleet, slot,
+                                                            u, v)
+                    except StaleQueryError:
+                        continue
+                    jax.block_until_ready(out)
+                    query_lat[tenant].append(time.perf_counter() - t0)
+        tick += 1
+    elapsed = time.perf_counter() - t_loop
+
+    total_applied = sum(applied.values())
+    print(f"\nfleet: {total_applied} applied events across "
+          f"{fcfg.tenants} tenants in {tick} ticks / {elapsed:.2f} s "
+          f"({total_applied / max(elapsed, 1e-9):,.0f} events/sec "
+          f"aggregate)")
+    print(f"admission: {manager.admissions} admissions, "
+          f"{manager.evictions} evictions, {manager.restores} restores "
+          f"(evict checkpoints under {evict_dir})")
+    print(f"sync accounting: fleet={sync_fleet} convergence checks vs "
+          f"sequential-equivalent={sync_seq_equiv} "
+          f"({sync_fleet / max(sync_seq_equiv, 1):.2f}x); "
+          f"per applied event {sync_fleet / max(total_applied, 1):.4f} "
+          f"vs {sync_seq_equiv / max(total_applied, 1):.4f}")
+    if refresh_lat:
+        print(f"vmapped refresh ({cfg.refresh.tour}"
+              + (f"+bcc {cfg.refresh.bcc}" if cadence.bcc != "off" else "")
+              + f"): median {np.median(refresh_lat)*1e3:.1f} ms over "
+              f"{len(refresh_lat)} calls")
+    print("\nper-tenant:")
+    for t in range(fcfg.tenants):
+        line = (f"  tenant {t}: {applied[t]:6d} applied  "
+                f"batch {_percentiles(batch_lat[t])}")
+        if payload_reads:
+            line += f"  query {_percentiles(query_lat[t])}"
+        print(line)
+    if payload_reads and sess is not None:
+        s = sess.sync_stats()
+        print(f"\nquery sync accounting (fleet totals): {s['builds']} "
+              f"table builds, {s['build_syncs_total']} build syncs, "
+              f"stale_served={s['stale_served']}, "
+              f"auto_refreshes={s['auto_refreshes']}")
+
+    if cfg.validate:
+        from repro.core.compress import roots_of
+        from repro.core.rst import rooted_spanning_tree
+        from repro.dynamic import live_graph
+        from repro.launch.serve_stream import canonical_partition
+
+        ok = True
+        for t in range(fcfg.tenants):
+            slot = manager.ensure(t)
+            f = manager.fleet.tenant(slot)
+            lg = live_graph(f)
+            root = int(np.asarray(f.rep)[0])
+            scratch = rooted_spanning_tree(lg, root, method="gconn_euler")
+            same = bool(np.array_equal(
+                canonical_partition(np.asarray(f.rep)),
+                canonical_partition(np.asarray(roots_of(scratch.parent)))))
+            ok = ok and same
+            print(f"validate tenant {t}: partition==from-scratch: {same}")
+        if not ok:
+            raise SystemExit("validate: FAILED")
+
+
+if __name__ == "__main__":
+    main()

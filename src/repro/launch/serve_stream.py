@@ -32,14 +32,20 @@ vertices.
 Since the query-layer PR the loop also serves *reads* (DESIGN.md §12):
 ``--read-ratio r`` interleaves query batches (LCA / connectivity /
 aggregates / BCC membership, round-robin) so that reads are fraction r
-of all events, answered by a ``dynamic.queries.QuerySession`` that
-adopts the loop's tour/BCC caches at each refresh cadence.
+of all events, answered by a ``dynamic.queries.QuerySession`` that the
+loop's ``ForestView`` re-adopts at each refresh cadence.
 ``--query-staleness`` picks the policy between refreshes: ``stale``
 (default — bounded staleness, serve the last refreshed view), ``strict``
 (skip + count read batches that would see a stale view), or ``refresh``
 (rebuild per stale read batch — the recompute ablation table7 measures).
-Read reporting: per-op latency percentiles plus the sync accounting —
-table builds and build-syncs amortized per read batch.
+Read reporting: per-op latency percentiles (ops that never fired in a
+short run report "no samples" instead of crashing the percentile math)
+plus the sync accounting — table builds and build-syncs amortized per
+read batch.
+
+The whole flag surface is the typed ``launch.config.ServeConfig`` schema
+(shared verbatim with ``serve_fleet``); this module binds it to argparse
+and hands the config object to ``ResilientStreamLoop.from_config``.
 """
 from __future__ import annotations
 
@@ -73,62 +79,32 @@ class _ReadDriver:
     make up ``read_ratio`` of all events, then drains it one query batch
     at a time: a round-robin op mix (BCC membership ops only when the
     loop maintains biconnectivity) over seeded-random vertex ids. The
-    ``QuerySession`` adopts the loop's tour/BCC caches whenever the
-    refresh cadence lands (object identity on ``loop.tn``) and serves
-    under ``--query-staleness`` in between; sync/staleness counters are
-    accumulated across session generations for the final report.
+    ``QuerySession`` is owned by the loop's ``ForestView`` — adoption
+    (rebuild on tour-refresh, carry counters across generations) is the
+    view's job; this driver only issues queries and records latencies.
     """
 
-    def __init__(self, loop, args, n: int):
+    def __init__(self, loop, cfg, n: int):
         import jax.numpy as jnp
 
         self.loop = loop
-        self.policy = args.query_staleness
-        self.read_batch = args.read_batch
-        self.per_write = (args.read_ratio / (1.0 - args.read_ratio)
-                          * args.batch / args.read_batch)
+        self.policy = cfg.read.query_staleness
+        self.read_batch = cfg.read.read_batch
+        self.per_write = (cfg.read.read_ratio / (1.0 - cfg.read.read_ratio)
+                          * cfg.stream.batch / cfg.read.read_batch)
         self.n = n
-        self.rng = np.random.default_rng(args.seed + 104729)
+        self.rng = np.random.default_rng(cfg.stream.seed + 104729)
         self.payload = jnp.asarray(
             self.rng.integers(1, 100, n), jnp.int32)
         self.debt = 0.0
-        self.sess = None
-        self.tn_seen = None
         self.lat: dict[str, list[float]] = {}
         self.batches = 0
         self.skipped_stale = 0
-        self.totals = {"builds": 0, "build_syncs_total": 0,
-                       "stale_served": 0, "auto_refreshes": 0}
 
-    def _fold_stats(self):
-        if self.sess is not None:
-            for k, v in self.sess.sync_stats().items():
-                self.totals[k] += v
-
-    def _ensure_session(self):
-        from repro.dynamic.queries import QuerySession
-
-        refreshed = (self.loop.tn is not None
-                     and self.loop.tn is not self.tn_seen)
-        if self.sess is not None and not refreshed:
-            return
-        self._fold_stats()
-        try:
-            self.sess = QuerySession.from_state(
-                self.loop.state, self.loop.tn, self.loop.bcc,
-                policy=self.policy)
-        except ValueError:
-            # Loop caches don't match the live state mid-interval (e.g.
-            # first batches before the first cadence refresh): build the
-            # view from the state alone, without BCC membership ops.
-            self.sess = QuerySession.from_state(self.loop.state,
-                                                policy=self.policy)
-        self.tn_seen = self.loop.tn
-
-    def _ops(self):
+    def _ops(self, sess):
         ops = ["lca", "connected", "depth", "subtree_add", "path_add",
                "path_min"]
-        if self.sess.bcc is not None:
+        if sess is not None and sess.bcc is not None:
             ops += ["is_bridge", "is_articulation"]
         return ops
 
@@ -137,11 +113,11 @@ class _ReadDriver:
 
         from repro.dynamic.queries import StaleQueryError
 
-        self._ensure_session()
+        sess = self.loop.view.adopt_session(self.loop.state)
         self.debt += self.per_write
         while self.debt >= 1.0:
             self.debt -= 1.0
-            ops = self._ops()
+            ops = self._ops(sess)
             op = ops[self.batches % len(ops)]
             u = self.rng.integers(0, self.n, self.read_batch)
             v = self.rng.integers(0, self.n, self.read_batch)
@@ -149,22 +125,22 @@ class _ReadDriver:
             t0 = time.perf_counter()
             try:
                 if op == "lca":
-                    out = self.sess.lca(state, u, v)
+                    out = sess.lca(state, u, v)
                 elif op == "connected":
-                    out = self.sess.connected(state, u, v)
+                    out = sess.connected(state, u, v)
                 elif op == "depth":
-                    out = self.sess.depth(state, u)
+                    out = sess.depth(state, u)
                 elif op == "subtree_add":
-                    out = self.sess.subtree_agg(state, u, self.payload)
+                    out = sess.subtree_agg(state, u, self.payload)
                 elif op == "path_add":
-                    out = self.sess.path_agg(state, u, v, self.payload)
+                    out = sess.path_agg(state, u, v, self.payload)
                 elif op == "path_min":
-                    out = self.sess.path_agg(state, u, v, self.payload,
-                                             "min")
+                    out = sess.path_agg(state, u, v, self.payload,
+                                        "min")
                 elif op == "is_bridge":
-                    out = self.sess.is_bridge(state, u, v)
+                    out = sess.is_bridge(state, u, v)
                 else:
-                    out = self.sess.is_articulation(state, u)
+                    out = sess.is_articulation(state, u)
             except StaleQueryError:
                 self.skipped_stale += 1   # strict policy between refreshes
                 self.batches += 1
@@ -174,19 +150,31 @@ class _ReadDriver:
             self.batches += 1
 
     def report(self) -> None:
-        self._fold_stats()
         served = sum(len(v) for v in self.lat.values())
         total = served * self.read_batch
         print(f"\nreads: {total} queries in {served} batches of "
               f"{self.read_batch} (staleness={self.policy}"
               + (f", {self.skipped_stale} batches skipped stale"
                  if self.skipped_stale else "") + ")")
-        for op in sorted(self.lat):
-            ms = np.asarray(self.lat[op]) * 1e3
+        # Full op mix, in round-robin order: a short run may never reach
+        # the later ops — report "no samples" instead of handing
+        # np.percentile an empty list.
+        sess = self.loop.view.session
+        mix = self._ops(sess)
+        extras = sorted(set(self.lat) - set(mix))
+        for op in mix + extras:
+            samples = self.lat.get(op, ())
+            if not len(samples):
+                print(f"  {op:15s}: no samples (op never reached in "
+                      f"{self.batches} read batches)")
+                continue
+            ms = np.asarray(samples) * 1e3
             print(f"  {op:15s}: p50 {np.percentile(ms, 50):7.2f} ms  "
                   f"p95 {np.percentile(ms, 95):7.2f} ms  "
                   f"({len(ms)} batches)")
-        t = self.totals
+        t = sess.sync_stats() if sess is not None else {
+            "builds": 0, "build_syncs_total": 0, "stale_served": 0,
+            "auto_refreshes": 0}
         amort = t["build_syncs_total"] / max(served, 1)
         print(f"query sync accounting: {t['builds']} table builds, "
               f"{t['build_syncs_total']} build syncs "
@@ -196,62 +184,16 @@ class _ReadDriver:
 
 
 def main(argv=None) -> None:
+    from repro.launch.config import ServeConfig
+
     ap = argparse.ArgumentParser(
-        description="batch-dynamic RST serving loop (DESIGN.md §9–§11)")
-    ap.add_argument("--graph", default="grid_64",
-                    help="data.graphs.SUITE name")
-    ap.add_argument("--stream", default="churn",
-                    choices=("sliding_window", "insert_heavy", "churn"))
-    ap.add_argument("--batch", type=int, default=64)
-    ap.add_argument("--steps", type=int, default=32,
-                    help="max update batches to apply")
-    ap.add_argument("--window", type=int, default=4,
-                    help="sliding_window retention (batches)")
-    ap.add_argument("--tour", default="incremental",
-                    choices=("incremental", "full", "off"),
-                    help="tour refresh mode (full = ablation baseline)")
-    ap.add_argument("--tour-every", type=int, default=4,
-                    help="refresh the tour numbering every k batches")
-    ap.add_argument("--bcc", default="off",
-                    choices=("incremental", "full", "off"),
-                    help="maintain pool biconnectivity at the tour "
-                         "cadence (DESIGN.md §10)")
-    ap.add_argument("--read-ratio", type=float, default=0.0,
-                    help="fraction of events that are queries: per write "
-                         "batch, issue read batches until reads/(reads+"
-                         "writes) ~ r (0 = writes only)")
-    ap.add_argument("--read-batch", type=int, default=64,
-                    help="queries per read batch")
-    ap.add_argument("--query-staleness", default="stale",
-                    choices=("strict", "refresh", "stale"),
-                    help="QuerySession policy between tour refreshes "
-                         "(DESIGN.md §12)")
-    ap.add_argument("--seed", type=int, default=0)
-    ap.add_argument("--validate", action="store_true",
-                    help="oracle-check the final forest")
-    ap.add_argument("--audit-every", type=int, default=0,
-                    help="audit invariants every k batches and run the "
-                         "repair ladder on violation (DESIGN.md §11)")
-    ap.add_argument("--chaos", default="",
-                    help="comma-separated dynamic.chaos injector names, "
-                         "or 'all' (deterministic fault injection)")
-    ap.add_argument("--chaos-every", type=int, default=8,
-                    help="inject one fault every k batches")
-    ap.add_argument("--chaos-seed", type=int, default=0)
-    ap.add_argument("--sanitize", action="store_true",
-                    help="quarantine malformed events before apply")
-    ap.add_argument("--ckpt-dir", default=None,
-                    help="checkpoint directory (enables crash recovery)")
-    ap.add_argument("--ckpt-every", type=int, default=0,
-                    help="checkpoint every k batches")
-    ap.add_argument("--resume", action="store_true",
-                    help="resume from the newest checkpoint in --ckpt-dir")
+        description="batch-dynamic RST serving loop (DESIGN.md §9–§12)")
+    ServeConfig.add_args(ap)
     args = ap.parse_args(argv)
-    if args.read_ratio and not 0.0 < args.read_ratio < 1.0:
-        ap.error("--read-ratio must be in (0, 1)")
-    if args.read_ratio and args.tour == "off":
-        ap.error("--read-ratio needs tour maintenance "
-                 "(--tour incremental|full)")
+    try:
+        cfg = ServeConfig.from_args(args).check()
+    except ValueError as e:
+        ap.error(str(e))
 
     import jax
 
@@ -260,41 +202,31 @@ def main(argv=None) -> None:
     from repro.dynamic.chaos import INJECTORS
     from repro.launch.resilient import ResilientStreamLoop
 
-    factory, kwargs, regime = SUITE[args.graph]
+    factory, kwargs, regime = SUITE[cfg.stream.graph]
     g = factory(**kwargs)
     n = g.n_nodes
-    stream_kwargs = {"batch": args.batch, "seed": args.seed}
-    if args.stream == "sliding_window":
-        stream_kwargs["window"] = args.window
-    if args.stream == "churn":
-        stream_kwargs["n_batches"] = args.steps
-    stream = STREAMS[args.stream](g, **stream_kwargs)
-    batches = stream.batches[:args.steps]
+    stream = STREAMS[cfg.stream.stream](g, **cfg.stream_kwargs())
+    batches = stream.batches[:cfg.stream.steps]
 
-    chaos = ()
-    if args.chaos:
-        chaos = (tuple(INJECTORS) if args.chaos == "all"
-                 else tuple(args.chaos.split(",")))
-        for name in chaos:
-            if name not in INJECTORS:
-                ap.error(f"unknown injector {name!r} "
-                         f"(have: {', '.join(INJECTORS)})")
+    try:
+        chaos = cfg.injector_names(INJECTORS)
+    except ValueError as e:
+        ap.error(str(e))
 
-    print(f"graph {args.graph} ({regime}): V={n} E={g.n_edges}; "
-          f"stream {args.stream}, batch={args.batch}, "
-          f"{len(batches)} batches, tour={args.tour}, bcc={args.bcc}"
-          + (f", chaos={','.join(chaos)}@{args.chaos_every}" if chaos
+    print(f"graph {cfg.stream.graph} ({regime}): V={n} E={g.n_edges}; "
+          f"stream {cfg.stream.stream}, batch={cfg.stream.batch}, "
+          f"{len(batches)} batches, tour={cfg.refresh.tour}, "
+          f"bcc={cfg.refresh.bcc}"
+          + (f", chaos={','.join(chaos)}@{cfg.chaos.chaos_every}" if chaos
              else "")
-          + (f", audit@{args.audit_every}" if args.audit_every else ""))
+          + (f", audit@{cfg.chaos.audit_every}" if cfg.chaos.audit_every
+             else ""))
 
-    loop = ResilientStreamLoop.from_stream(
-        stream,
-        tour_mode=args.tour, bcc_mode=args.bcc, tour_every=args.tour_every,
-        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
-        audit_every=args.audit_every, chaos=chaos,
-        chaos_every=args.chaos_every, chaos_seed=args.chaos_seed,
-        sanitize=args.sanitize)
-    if args.resume:
+    loop = ResilientStreamLoop.from_config(stream, cfg)
+    if cfg.read.read_ratio:
+        # Let the loop's view own the QuerySession at the refresh cadence.
+        loop.view.policy = cfg.cadence()
+    if cfg.ckpt.resume:
         start = loop.resume()
         if start:
             print(f"resumed from checkpoint at batch {start}")
@@ -305,7 +237,7 @@ def main(argv=None) -> None:
         warm, _ = replay_batch(loop.state, batches[loop.cursor])
         jax.block_until_ready(warm.parent)
 
-    reads = _ReadDriver(loop, args, n) if args.read_ratio else None
+    reads = _ReadDriver(loop, cfg, n) if cfg.read.read_ratio else None
 
     def on_batch(step, stats, dt):
         if reads is not None:
@@ -340,11 +272,11 @@ def main(argv=None) -> None:
         print(f"batch latency: p50 {np.percentile(lat_ms, 50):.1f} ms, "
               f"p95 {np.percentile(lat_ms, 95):.1f} ms")
         if loop.tour_lat:
-            print(f"tour refresh ({args.tour}): median "
+            print(f"tour refresh ({cfg.refresh.tour}): median "
                   f"{np.median(loop.tour_lat)*1e3:.1f} ms over "
                   f"{len(loop.tour_lat)} calls")
         if loop.bcc_lat:
-            print(f"bcc refresh ({args.bcc}): median "
+            print(f"bcc refresh ({cfg.refresh.bcc}): median "
                   f"{np.median(loop.bcc_lat)*1e3:.1f} ms over "
                   f"{len(loop.bcc_lat)} calls; "
                   f"final n_bcc={int(loop.bcc.n_bcc)} "
@@ -359,7 +291,7 @@ def main(argv=None) -> None:
         print(f"quarantined: {total} malformed events rejected by the "
               f"sanitizer ({cats})" if total else
               "quarantined: 0 malformed events")
-    if chaos or args.audit_every:
+    if chaos or cfg.chaos.audit_every:
         n_rec = len(loop.recoveries)
         modes = {}
         for _, info in loop.recoveries:
@@ -371,7 +303,7 @@ def main(argv=None) -> None:
         if loop.last_report is not None:
             print(f"final audit: {loop.last_report.summary()}")
 
-    if args.validate:
+    if cfg.validate:
         from repro.core.compress import roots_of
         from repro.core.rst import rooted_spanning_tree
         from repro.core.validate import validate_rst

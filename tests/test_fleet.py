@@ -1,0 +1,487 @@
+"""Multi-tenant fleet (DESIGN.md §13): replay equivalence vs independent
+single-tenant loops, evict/re-admit bit-identity, dispatcher/manager
+contracts, per-tenant staleness policies, the unified ServeConfig
+schema, and the ForestView refresh surface."""
+import dataclasses
+
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core import queries as q
+from repro.core.queries import build_tables
+from repro.data import graphs as G
+from repro.data.streams import STREAMS, StreamBatch
+from repro.dynamic.bcc import refresh_bcc
+from repro.dynamic.fleet import (FleetDispatcher, FleetManager,
+                                 FleetQuerySession, apply_batches,
+                                 fleet_empty, fleet_sync_cost,
+                                 refresh_bccs, refresh_tours, tenant_slice)
+from repro.dynamic.forest import forest_empty
+from repro.dynamic.queries import StaleQueryError
+from repro.dynamic.replay import init_state, replay_batch, stream_capacity
+from repro.dynamic.tour import refresh_tour
+from repro.dynamic.view import (CadencePolicy, ForestView,
+                                refresh_bcc_once, refresh_tour_once)
+from repro.launch.config import FleetConfig, ServeConfig
+
+_T = 3          # tenants in the equivalence fleets
+_CADENCE = 2    # mid-run incremental refresh cadence
+
+
+def _streams(g, stream_name, batch=16, n=4):
+    kw = {"batch": batch, "seed": 0}
+    if stream_name == "sliding_window":
+        kw["window"] = 2
+    if stream_name == "churn":
+        kw["n_batches"] = n
+    return [STREAMS[stream_name](g, **{**kw, "seed": t})
+            for t in range(_T)]
+
+
+def _tick_block(streams, i):
+    return tuple(np.stack([np.asarray(getattr(s.batches[i], f))
+                           for s in streams])
+                 for f in ("ins_u", "ins_v", "del_u", "del_v"))
+
+
+def _assert_forest_equal(fleet, t, state, tag=""):
+    for field in ("parent", "rep", "pool_src", "pool_dst", "pool_valid",
+                  "tree_mask", "dirty", "version"):
+        assert_array_equal(
+            np.asarray(getattr(fleet.tenant(t), field)),
+            np.asarray(getattr(state, field)),
+            err_msg=f"{tag}: tenant {t} field {field}")
+
+
+def _assert_tree_equal(stacked, t, single, tag=""):
+    import jax
+    a = jax.tree_util.tree_leaves(tenant_slice(stacked, t))
+    b = jax.tree_util.tree_leaves(single)
+    assert len(a) == len(b)
+    for i, (x, y) in enumerate(zip(a, b)):
+        assert_array_equal(np.asarray(x), np.asarray(y),
+                           err_msg=f"{tag}: tenant {t} leaf {i}")
+
+
+@pytest.mark.parametrize("stream_name", sorted(STREAMS))
+def test_fleet_replay_matches_independent_loops(stream_name):
+    """T-tenant vmapped fleet == T single-tenant loops, bit for bit:
+    forests, tour numberings, BCC labels, and query answers — with
+    cadenced incremental refreshes interleaved mid-run on both sides."""
+    g = G.grid2d(8)
+    streams = _streams(g, stream_name)
+    steps = min(4, min(len(s.batches) for s in streams))
+    assert steps >= 2
+    capacity = max(stream_capacity(s) for s in streams)
+
+    # Fleet side: one (T, B) block per tick, vmapped refreshes.
+    fleet = fleet_empty(_T, g.n_nodes, capacity)
+    for t, s in enumerate(streams):
+        fleet = fleet.set_tenant(t, init_state(s, capacity=capacity))
+    tn_f = None
+    sync_fleet = 0
+    sync_seq_equiv = 0
+    for i in range(steps):
+        fleet, stats = apply_batches(fleet, *_tick_block(streams, i))
+        sync_fleet += fleet_sync_cost(stats)
+        sync_seq_equiv += int(np.asarray(stats["rounds"]).sum()) + _T
+        if (i + 1) % _CADENCE == 0:
+            tn_f, fleet = refresh_tours(fleet, tn_f)
+    tn_f, fleet = refresh_tours(fleet, tn_f)
+    bcc_f = refresh_bccs(fleet, tour=tn_f, incremental=False)
+
+    # Sequential reference: per-tenant replay with the same cadence.
+    for t, s in enumerate(streams):
+        state = init_state(s, capacity=capacity)
+        tn = None
+        for i in range(steps):
+            state, _ = replay_batch(state, s.batches[i])
+            if (i + 1) % _CADENCE == 0:
+                tn, state = refresh_tour(state, tn)
+        tn, state = refresh_tour(state, tn)
+        bcc = refresh_bcc(state, tour=tn, incremental=False)
+
+        _assert_forest_equal(fleet, t, state, stream_name)
+        _assert_tree_equal(tn_f, t, tn, f"{stream_name}/tour")
+        _assert_tree_equal(bcc_f, t, bcc, f"{stream_name}/bcc")
+
+        # Query answers through the fleet session == core-op oracle.
+        sess = FleetQuerySession.from_fleet(fleet, tn_f, bcc_f,
+                                            policy="strict")
+        tab = build_tables(tn)
+        rng = np.random.default_rng(7 * (t + 1))
+        u = rng.integers(0, g.n_nodes, 32).astype(np.int32)
+        v = rng.integers(0, g.n_nodes, 32).astype(np.int32)
+        assert_array_equal(np.asarray(sess.connected(fleet, t, u, v)),
+                           np.asarray(q.connected(tab, u, v)))
+        assert_array_equal(np.asarray(sess.lca(fleet, t, u, v)),
+                           np.asarray(q.lca(tab, u, v)))
+        assert_array_equal(np.asarray(sess.depth(fleet, t, v)),
+                           np.asarray(q.depth_of(tab, v)))
+
+    # The §13 headline must hold on this workload: one vmapped tick
+    # bills max+1 checks, not sum+T.
+    assert sync_fleet < sync_seq_equiv
+
+
+def test_evict_readmit_replay_equivalence(tmp_path):
+    """3 tenants rotating through 2 slots: every tenant's final forest is
+    bit-identical to replaying its unit sequence alone, even though each
+    was evicted (checkpoint) and re-admitted (restore) mid-history."""
+    g = G.grid2d(8)
+    n = g.n_nodes
+    batch = 16
+    streams = _streams(g, "churn", batch=batch, n=4)
+    capacity = max(stream_capacity(s) for s in streams)
+
+    # Per-tenant unit sequences: init edges as insert-only units, then
+    # the stream batches — every event rides the dispatcher.
+    units = {t: [] for t in range(_T)}
+    for t, s in enumerate(streams):
+        for off in range(0, s.init_u.shape[0], batch):
+            iu = np.full(batch, n, np.int32)
+            iv = np.full(batch, n, np.int32)
+            chunk = s.init_u[off:off + batch]
+            iu[:chunk.shape[0]] = chunk
+            iv[:chunk.shape[0]] = s.init_v[off:off + batch]
+            units[t].append(StreamBatch(
+                ins_u=iu, ins_v=iv, del_u=np.full(batch, n, np.int32),
+                del_v=np.full(batch, n, np.int32)))
+        units[t].extend(s.batches)
+
+    manager = FleetManager(fleet_empty(2, n, capacity), tmp_path)
+    dispatcher = FleetDispatcher(n, batch)
+    for t, seq in units.items():
+        for b in seq:
+            dispatcher.offer(t, b)
+
+    tick = 0
+    while dispatcher.pending():
+        waiting = [t for t in range(_T) if dispatcher.pending(t)]
+        # Rotate admission so tenants keep displacing each other — the
+        # serve_fleet loop's first-come policy would never restore.
+        rot = tick % max(len(waiting), 1)
+        for t in (waiting[rot:] + waiting[:rot])[:2]:
+            manager.ensure(t)
+        block, served = dispatcher.tick(manager.tenant_at)
+        manager.fleet, _ = apply_batches(manager.fleet, *block)
+        manager.note_applied(served)
+        tick += 1
+
+    assert manager.evictions > 0
+    assert manager.restores > 0, \
+        "rotation never exercised the checkpoint-restore path"
+
+    for t, seq in units.items():
+        assert manager.cursors[t] == len(seq)
+        slot = manager.ensure(t)
+        state = forest_empty(n, capacity)
+        for b in seq:
+            state, _ = replay_batch(state, b)
+        _assert_forest_equal(manager.fleet, slot, state, "evict/readmit")
+
+
+# -- dispatcher ---------------------------------------------------------------
+
+def test_dispatcher_units_are_atomic_and_fifo():
+    n, b = 16, 4
+    d = FleetDispatcher(n, b)
+    mk = lambda lo: StreamBatch(
+        ins_u=np.arange(lo, lo + b, dtype=np.int32) % n,
+        ins_v=(np.arange(lo, lo + b, dtype=np.int32) + 1) % n,
+        del_u=np.full(b, n, np.int32), del_v=np.full(b, n, np.int32))
+    first, second = mk(0), mk(8)
+    d.offer("a", first)
+    d.offer("a", second)
+    for expect in (first, second):
+        (iu, iv, _du, _dv), served = d.tick(["a", None])
+        assert_array_equal(np.asarray(iu[0]), expect.ins_u)
+        assert_array_equal(np.asarray(iv[0]), expect.ins_v)
+        # Empty slot rows are all-sentinel (inert under apply_batches).
+        assert np.all(np.asarray(iu[1]) == n)
+        assert served == {"a": b}
+    assert d.pending() == 0
+    (iu, _, du, _), served = d.tick(["a", None])
+    assert served == {} and np.all(np.asarray(iu) == n)
+    assert np.all(np.asarray(du) == n)
+
+
+def test_dispatcher_rejects_wrong_shape():
+    d = FleetDispatcher(16, 4)
+    bad = StreamBatch(ins_u=np.zeros(8, np.int32),
+                      ins_v=np.zeros(8, np.int32),
+                      del_u=np.zeros(8, np.int32),
+                      del_v=np.zeros(8, np.int32))
+    with pytest.raises(ValueError, match="fixed-shape"):
+        d.offer("a", bad)
+
+
+# -- manager ------------------------------------------------------------------
+
+def test_manager_lru_eviction_order(tmp_path):
+    manager = FleetManager(fleet_empty(2, 16, 8), tmp_path)
+    assert manager.ensure("a") == 0
+    assert manager.ensure("b") == 1
+    manager.touch("a")                      # b is now least-recently-used
+    slot_c = manager.ensure("c")
+    assert slot_c == 1 and "b" not in manager.slot_of
+    assert manager.evictions == 1 and manager.restores == 0
+    # b returns via the restore path, displacing the LRU resident (a).
+    slot_b = manager.ensure("b")
+    assert slot_b == 0 and manager.restores == 1
+    assert manager.tenant_at == ["b", "c"]
+
+
+# -- per-tenant staleness policies --------------------------------------------
+
+def _two_tenant_fleet():
+    g = G.grid2d(4)
+    streams = [STREAMS["churn"](g, batch=8, n_batches=3, seed=t)
+               for t in range(2)]
+    capacity = max(stream_capacity(s) for s in streams)
+    fleet = fleet_empty(2, g.n_nodes, capacity)
+    for t, s in enumerate(streams):
+        fleet = fleet.set_tenant(t, init_state(s, capacity=capacity))
+    return fleet, streams, g.n_nodes
+
+
+def test_fleet_session_policies_per_tenant():
+    fleet, streams, n = _two_tenant_fleet()
+    sess = FleetQuerySession.from_fleet(fleet, policy=("strict", "stale"))
+    u = np.arange(4, dtype=np.int32)
+    sess.connected(fleet, 0, u, u)          # fresh: fine on both
+    sess.connected(fleet, 1, u, u)
+
+    fleet, _ = apply_batches(fleet, *_tick_block(streams, 0))
+    with pytest.raises(StaleQueryError):
+        sess.connected(fleet, 0, u, u)
+    sess.connected(fleet, 1, u, u)          # stale lane serves + counts
+    assert sess.sync_stats(1)["stale_served"] == 1
+    assert sess.sync_stats(0)["stale_served"] == 0
+
+
+def test_fleet_session_refresh_rebuilds_one_lane():
+    fleet, streams, n = _two_tenant_fleet()
+    sess = FleetQuerySession.from_fleet(fleet, policy="refresh")
+    fleet, _ = apply_batches(fleet, *_tick_block(streams, 0))
+    u = np.arange(n, dtype=np.int32)
+    out = np.asarray(sess.connected(fleet, 0, u, u))
+    assert out.all()                        # v~v, answered post-rebuild
+    assert sess.sync_stats(0)["auto_refreshes"] == 1
+    assert sess.sync_stats(1)["auto_refreshes"] == 0
+    assert sess.is_fresh(fleet, 0) and not sess.is_fresh(fleet, 1)
+    # The rebuilt lane now matches a from-scratch single-tenant oracle.
+    from repro.core.euler import tour_numbering
+    tab = build_tables(tour_numbering(fleet.parent[0]))
+    rng = np.random.default_rng(3)
+    a = rng.integers(0, n, 16).astype(np.int32)
+    b = rng.integers(0, n, 16).astype(np.int32)
+    assert_array_equal(np.asarray(sess.lca(fleet, 0, a, b)),
+                       np.asarray(q.lca(tab, a, b)))
+
+
+def test_fleet_session_rejects_bad_policy():
+    fleet, _, _ = _two_tenant_fleet()
+    with pytest.raises(ValueError, match="policy"):
+        FleetQuerySession.from_fleet(fleet, policy="yolo")
+    with pytest.raises(ValueError, match="policies"):
+        FleetQuerySession.from_fleet(fleet, policy=("strict",) * 3)
+
+
+# -- fleet container contracts ------------------------------------------------
+
+def test_set_tenant_rejects_schema_mismatch():
+    fleet = fleet_empty(2, 16, 8)
+    with pytest.raises(ValueError, match="n_nodes"):
+        fleet.set_tenant(0, forest_empty(32, 8))
+    with pytest.raises(ValueError, match="capacity"):
+        fleet.set_tenant(0, forest_empty(16, 4))
+
+
+def test_clear_tenant_roundtrip():
+    fleet, _, n = _two_tenant_fleet()
+    assert bool(fleet.active[0]) and bool(fleet.active[1])
+    cleared = fleet.clear_tenant(0)
+    assert not bool(cleared.active[0]) and bool(cleared.active[1])
+    _assert_forest_equal(cleared, 0, forest_empty(n, fleet.capacity))
+    # Lane 1 untouched by the clear.
+    _assert_forest_equal(cleared, 1, fleet.tenant(1))
+
+
+# -- ServeConfig / FleetConfig (the unified CLI schema) -----------------------
+
+def _parse(argv):
+    import argparse
+    ap = argparse.ArgumentParser()
+    ServeConfig.add_args(ap)
+    return ServeConfig.from_args(ap.parse_args(argv))
+
+
+def test_serve_config_roundtrip_and_defaults():
+    cfg = _parse([])
+    assert cfg == ServeConfig()             # flag defaults == schema defaults
+    cfg = _parse(["--graph", "chain_4k", "--stream", "sliding_window",
+                  "--batch", "32", "--steps", "7", "--window", "3",
+                  "--tour", "full", "--tour-every", "2", "--bcc",
+                  "incremental", "--read-ratio", "0.25", "--read-batch",
+                  "16", "--query-staleness", "refresh", "--chaos",
+                  "drop_edges", "--audit-every", "4", "--ckpt-every", "5",
+                  "--validate"])
+    assert ServeConfig.from_dict(cfg.to_dict()) == cfg
+    assert cfg.stream_kwargs() == {"batch": 32, "seed": 0, "window": 3}
+    pol = cfg.cadence()
+    assert isinstance(pol, CadencePolicy)
+    assert (pol.tour, pol.bcc, pol.every) == ("full", "incremental", 2)
+    assert pol.queries and pol.staleness == "refresh"
+
+
+def test_serve_config_check_rejects_bad_combos():
+    with pytest.raises(ValueError, match="read-ratio"):
+        dataclasses.replace(
+            _parse(["--read-ratio", "1.5"]),).check()
+    with pytest.raises(ValueError, match="tour maintenance"):
+        _parse(["--read-ratio", "0.5", "--tour", "off"]).check()
+    assert _parse(["--read-ratio", "0.5"]).check()
+
+
+def test_serve_config_injector_names():
+    assert _parse([]).injector_names(("a", "b")) == ()
+    assert _parse(["--chaos", "all"]).injector_names(("a", "b")) == \
+        ("a", "b")
+    assert _parse(["--chaos", "b,a"]).injector_names(("a", "b")) == \
+        ("b", "a")
+    with pytest.raises(ValueError, match="unknown injector"):
+        _parse(["--chaos", "nope"]).injector_names(("a", "b"))
+
+
+def test_fleet_config_binding():
+    import argparse
+    ap = argparse.ArgumentParser()
+    FleetConfig.add_args(ap)
+    fcfg = FleetConfig.from_args(ap.parse_args(
+        ["--tenants", "6", "--slots", "2"]))
+    assert fcfg == FleetConfig(tenants=6, slots=2)
+    with pytest.raises(ValueError):
+        FleetConfig(tenants=0).check()
+
+
+# -- ForestView / CadencePolicy (the unified refresh surface) -----------------
+
+def test_cadence_policy_due_and_validation():
+    pol = CadencePolicy(every=4)
+    assert [pol.due(s) for s in range(8)] == \
+        [False, False, False, True, False, False, False, True]
+    assert pol.due(None)                    # forced is always due
+    assert not CadencePolicy(every=0).due(3)
+    assert CadencePolicy(every=0).due(None)
+    with pytest.raises(ValueError):
+        CadencePolicy(tour="sometimes")
+    with pytest.raises(ValueError):
+        CadencePolicy(staleness="fresh-ish")
+
+
+def _one_tenant_state():
+    g = G.grid2d(4)
+    s = STREAMS["churn"](g, batch=8, n_batches=4, seed=0)
+    return init_state(s), s
+
+
+def test_deprecated_wrappers_match_canonical():
+    state, s = _one_tenant_state()
+    state, _ = replay_batch(state, s.batches[0])
+    tn_a, st_a = refresh_tour(state, None)
+    tn_b, st_b = refresh_tour_once(state, None)
+    _assert_tree_equal_flat(tn_a, tn_b)
+    assert_array_equal(np.asarray(st_a.dirty), np.asarray(st_b.dirty))
+    assert_array_equal(np.asarray(refresh_bcc(state, tour=tn_a).edge_bcc),
+                       np.asarray(refresh_bcc_once(state,
+                                                   tour=tn_b).edge_bcc))
+
+
+def _assert_tree_equal_flat(a, b):
+    import jax
+    for x, y in zip(jax.tree_util.tree_leaves(a),
+                    jax.tree_util.tree_leaves(b)):
+        assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_forest_view_cadence_and_prime():
+    state, s = _one_tenant_state()
+    view = ForestView(CadencePolicy(tour="incremental", bcc="full",
+                                    every=2))
+    state = view.prime(state)
+    assert view.tn is not None and view.bcc is not None
+    tn0 = view.tn
+    state, _ = replay_batch(state, s.batches[0])
+    state = view.refresh(state, step=0)     # off-cadence: untouched
+    assert view.tn is tn0
+    state, _ = replay_batch(state, s.batches[1])
+    state = view.refresh(state, step=1)     # (1+1) % 2 == 0: refreshed
+    assert view.tn is not tn0
+    assert not np.asarray(state.dirty).any()
+    assert len(view.tour_lat) == 2 and len(view.bcc_lat) == 2
+    # Per-call override: force queries only, tour/bcc skipped.
+    tn1 = view.tn
+    view.refresh(state, tour=False, bcc=False, queries=True)
+    assert view.tn is tn1 and view.session is not None
+
+
+def test_forest_view_session_adoption_carries_counters():
+    state, s = _one_tenant_state()
+    view = ForestView(CadencePolicy(tour="incremental", every=1,
+                                    queries=True, staleness="stale"))
+    state = view.prime(state)
+    sess0 = view.adopt_session(state)
+    assert view.adopt_session(state) is sess0   # same tn → same session
+    sess0.stale_served += 3
+    state, _ = replay_batch(state, s.batches[0])
+    state = view.refresh(state, step=0)         # new tn → re-adoption
+    sess1 = view.session
+    assert sess1 is not sess0
+    assert sess1.stale_served == 3              # counters carried over
+    assert sess1.builds >= sess0.builds
+
+
+def test_forest_view_bcc_only_policy_still_primes_tour():
+    state, _ = _one_tenant_state()
+    view = ForestView(CadencePolicy(tour="off", bcc="full"))
+    view.prime(state)
+    assert view.tn is not None and view.bcc is not None
+
+
+# -- serving entry points (smoke, tiny monkeypatched graph) -------------------
+
+@pytest.fixture
+def tiny_suite(monkeypatch):
+    from repro.data.graphs import SUITE
+    monkeypatch.setitem(SUITE, "tiny_grid8",
+                        (G.grid2d, dict(side=8), "tiny test graph"))
+    return "tiny_grid8"
+
+
+def test_serve_stream_report_handles_zero_sample_ops(tiny_suite, capsys):
+    """Regression: ops the read mix never reached must report 'no
+    samples' instead of np.percentile crashing on an empty list."""
+    from repro.launch import serve_stream
+    serve_stream.main(["--graph", tiny_suite, "--stream", "churn",
+                       "--batch", "16", "--steps", "4", "--tour-every",
+                       "2", "--read-ratio", "0.05", "--read-batch", "64",
+                       "--seed", "1"])
+    out = capsys.readouterr().out
+    assert "no samples" in out
+    assert "Traceback" not in out
+
+
+def test_serve_fleet_end_to_end(tiny_suite, tmp_path, capsys):
+    from repro.launch import serve_fleet
+    serve_fleet.main(["--graph", tiny_suite, "--stream", "churn",
+                      "--batch", "16", "--steps", "3", "--tenants", "3",
+                      "--slots", "2", "--tour-every", "2", "--bcc",
+                      "incremental", "--read-ratio", "0.3",
+                      "--read-batch", "8", "--evict-dir", str(tmp_path),
+                      "--validate"])
+    out = capsys.readouterr().out
+    assert "sync accounting: fleet=" in out
+    assert out.count("partition==from-scratch: True") == 3
+    assert "evictions" in out
