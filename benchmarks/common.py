@@ -2,10 +2,31 @@
 runs, report the median (§IV)."""
 from __future__ import annotations
 
+import subprocess
 import time
 
 import jax
 import numpy as np
+
+#: bump when the record layout changes (stamped into every JSON row).
+BENCH_SCHEMA_VERSION = 1
+
+
+def bench_meta() -> dict:
+    """Provenance stamped onto every BENCH_rst.json record: without the
+    producing commit + backend a perf trajectory point is unattributable."""
+    try:
+        sha = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            capture_output=True, text=True, timeout=10).stdout.strip()
+    except (OSError, subprocess.SubprocessError):
+        sha = ""
+    dev = jax.devices()[0]
+    return {"git_sha": sha or "unknown",
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_kind": dev.device_kind,
+            "schema_version": BENCH_SCHEMA_VERSION}
 
 
 def time_fn(fn, *args, n_runs: int = 5, warmup: int = 1, **kwargs):
@@ -24,11 +45,19 @@ def csv_row(name: str, us_per_call: float, derived: str = "") -> str:
     return f"{name},{us_per_call:.1f},{derived}"
 
 
-def rows_to_records(rows: list[str]) -> list[dict]:
-    """Parse ``name,us_per_call,derived`` CSV rows into JSON-able records."""
+def rows_to_records(rows: list[str], meta: dict | None = None) -> list[dict]:
+    """Parse ``name,us_per_call,derived`` CSV rows into JSON-able records.
+
+    With ``meta`` (see :func:`bench_meta`), every record carries the same
+    provenance dict and the list is sorted by name — a stable order so
+    two runs of the same tree diff cleanly."""
     records = []
     for row in rows:
         name, us, derived = row.split(",", 2)
-        records.append({"name": name, "us_per_call": float(us),
-                        "derived": derived})
+        rec = {"name": name, "us_per_call": float(us), "derived": derived}
+        if meta is not None:
+            rec["meta"] = meta
+        records.append(rec)
+    if meta is not None:
+        records.sort(key=lambda r: r["name"])
     return records

@@ -26,7 +26,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
 
 Flags:
   --json PATH   also write all rows as JSON records (machine-readable perf
-                trajectory, e.g. ``--json BENCH_rst.json``)
+                trajectory, e.g. ``--json BENCH_rst.json``); each record
+                is stamped with a ``meta`` provenance dict (git sha, jax
+                version, backend/device kind, schema version) and the
+                list is sorted by name for stable diffs
   --smoke       one tiny graph per fig/table + small microbenches — fast
                 enough for CI, exercises every perf path
 """
@@ -109,7 +112,7 @@ def main(argv=None) -> None:
                             table4_dynamic, table5_dynamic_bcc,
                             table6_robustness, table7_queries,
                             table8_fleet)
-    from benchmarks.common import rows_to_records
+    from benchmarks.common import bench_meta, rows_to_records
     from repro.data import graphs as G
 
     if args.smoke:
@@ -153,7 +156,8 @@ def main(argv=None) -> None:
 
     if args.json:
         pathlib.Path(args.json).write_text(
-            json.dumps(rows_to_records(rows), indent=1) + "\n")
+            json.dumps(rows_to_records(rows, meta=bench_meta()), indent=1)
+            + "\n")
         print(f"# wrote {len(rows)} rows to {args.json}", file=sys.stderr)
 
 

@@ -40,6 +40,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import csv_row, time_fn
+from repro import obs
 from repro.data.graphs import build_suite
 from repro.data.streams import STREAMS
 from repro.dynamic import (audit_forest, init_state, inject, rebuild_forest,
@@ -76,12 +77,17 @@ def run(suite=None) -> list[str]:
         state, tn, bcc = _steady_state(g)
         base = f"table6_robustness/{name}"
 
-        report = jax.block_until_ready(audit_forest(state, tn, bcc))
+        # The audit row's sync column derives from the obs ledger; the
+        # report's own counter is the regression oracle.
+        with obs.SyncLedger() as led:
+            report = jax.block_until_ready(audit_forest(state, tn, bcc))
         assert bool(report.healthy), f"{name}: steady state unhealthy"
+        assert led.total("audit") == int(report.syncs), \
+            (led.total("audit"), int(report.syncs))
         t_audit = time_fn(lambda: jax.block_until_ready(
             audit_forest(state, tn, bcc)))
         rows.append(csv_row(f"{base}/audit", t_audit * 1e6,
-                            f"syncs={int(report.syncs)};healthy=1"))
+                            f"syncs={led.total('audit')};healthy=1"))
 
         for injector in _INJECTORS:
             for k in _FAULT_COUNTS:
@@ -102,11 +108,16 @@ def run(suite=None) -> list[str]:
                 rep_bad = jax.block_until_ready(audit_forest(bad))
                 assert not bool(rep_bad.forest_ok), (name, injector, k)
 
-                fixed, rstats = jax.block_until_ready(
-                    repair_forest(bad, rep_bad))
+                with obs.SyncLedger() as led_s:
+                    fixed, rstats = jax.block_until_ready(
+                        repair_forest(bad, rep_bad))
+                assert led_s.total("repair") == int(rstats["sync_total"])
                 t_scoped = time_fn(lambda: jax.block_until_ready(
                     repair_forest(bad, rep_bad)))
-                rebuilt, bstats = jax.block_until_ready(rebuild_forest(bad))
+                with obs.SyncLedger() as led_f:
+                    rebuilt, bstats = jax.block_until_ready(
+                        rebuild_forest(bad))
+                assert led_f.total("rebuild") == int(bstats["sync_total"])
                 t_full = time_fn(lambda: jax.block_until_ready(
                     rebuild_forest(bad)))
 
@@ -123,14 +134,14 @@ def run(suite=None) -> list[str]:
                 kbase = f"{base}/{injector}/f{k}"
                 rows.append(csv_row(
                     f"{kbase}/scoped", t_scoped * 1e6,
-                    f"sync_total={int(rstats['sync_total'])};"
+                    f"sync_total={led_s.total('repair')};"
                     f"rounds={int(rstats['rounds'])};"
                     f"severed={int(rstats['severed'])};"
                     f"repaired={int(rstats['repaired'])};"
                     f"audit_syncs={int(rep_bad.syncs)}"))
                 rows.append(csv_row(
                     f"{kbase}/full", t_full * 1e6,
-                    f"sync_total={int(bstats['sync_total'])};"
+                    f"sync_total={led_f.total('rebuild')};"
                     f"cc_rounds={int(bstats['cc_rounds'])};"
                     f"rank_syncs={int(bstats['rank_syncs'])}"))
     return rows

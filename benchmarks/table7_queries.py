@@ -31,6 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import csv_row, time_fn
+from repro import obs
 from repro.core.euler import tour_numbering
 from repro.core.queries import (build_tables, connected, lca, path_agg,
                                 subtree_agg)
@@ -67,7 +68,14 @@ def run(suite=None) -> list[str]:
         u = jnp.asarray(rng.integers(0, n, N_QUERIES), jnp.int32)
         v = jnp.asarray(rng.integers(0, n, N_QUERIES), jnp.int32)
         payload = jnp.asarray(rng.integers(1, 100, n), jnp.int32)
-        build_syncs = int(build_tables(tn).build_syncs)
+        # sync_per_read derives from the obs ledger ("build_tables" is
+        # the only phase a query-serving interval pays); the tables'
+        # own build_syncs field is the regression oracle.
+        with obs.SyncLedger() as led:
+            build_syncs = int(build_tables(tn).build_syncs)
+        assert led.total("build_tables") == build_syncs, \
+            (led.total("build_tables"), build_syncs)
+        build_syncs = led.total("build_tables")
 
         for scen, reads in SCENARIOS.items():
             def amortized():

@@ -34,6 +34,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import csv_row
+from repro import obs
 from repro.data.graphs import build_suite
 from repro.data.streams import STREAMS
 from repro.dynamic.fleet import (apply_batches, fleet_empty,
@@ -59,15 +60,20 @@ def _run_fleet(streams, capacity, n_nodes, steps):
         fleet = fleet.set_tenant(t, init_state(s, capacity=capacity))
     tn = None
     sync = 0
-    for i in range(steps):
-        iu, iv, du, dv = _tick_block(streams, i)
-        fleet, stats = apply_batches(fleet, iu, iv, du, dv)
-        sync += fleet_sync_cost(stats)
-        if (i + 1) % _CADENCE == 0:
-            tn, fleet = refresh_tours(fleet, tn)
-    tn, fleet = refresh_tours(fleet, tn)
+    with obs.SyncLedger() as led:
+        for i in range(steps):
+            iu, iv, du, dv = _tick_block(streams, i)
+            fleet, stats = apply_batches(fleet, iu, iv, du, dv)
+            sync += fleet_sync_cost(stats)
+            if (i + 1) % _CADENCE == 0:
+                tn, fleet = refresh_tours(fleet, tn)
+        tn, fleet = refresh_tours(fleet, tn)
     jax.block_until_ready(fleet.parent)
-    return fleet, sync
+    # The ledger is the reporting path; the hand-summed fleet_sync_cost
+    # is the regression oracle — both count the same while_loop carries.
+    assert led.total("fleet_apply") == sync, \
+        (led.total("fleet_apply"), sync)
+    return fleet, led.total("fleet_apply")
 
 
 def _run_sequential(streams, capacity, steps):
@@ -75,20 +81,22 @@ def _run_sequential(streams, capacity, steps):
     tns = [None] * len(streams)
     sync = 0
     events = 0
-    for i in range(steps):
-        for t, s in enumerate(streams):
-            states[t], stats = replay_batch(states[t], s.batches[i])
-            sync += int(stats["rounds"]) + 1
-            n = s.n_nodes
-            ins = int((np.asarray(s.batches[i].ins_u) < n).sum())
-            events += (ins - int(stats["overflow"])
-                       + int(stats["deletes_found"]))
-            if (i + 1) % _CADENCE == 0:
-                tns[t], states[t] = refresh_tour(states[t], tns[t])
-    for t in range(len(streams)):
-        tns[t], states[t] = refresh_tour(states[t], tns[t])
+    with obs.SyncLedger() as led:
+        for i in range(steps):
+            for t, s in enumerate(streams):
+                states[t], stats = replay_batch(states[t], s.batches[i])
+                sync += int(stats["rounds"]) + 1
+                n = s.n_nodes
+                ins = int((np.asarray(s.batches[i].ins_u) < n).sum())
+                events += (ins - int(stats["overflow"])
+                           + int(stats["deletes_found"]))
+                if (i + 1) % _CADENCE == 0:
+                    tns[t], states[t] = refresh_tour(states[t], tns[t])
+        for t in range(len(streams)):
+            tns[t], states[t] = refresh_tour(states[t], tns[t])
     jax.block_until_ready(states[0].parent)
-    return states, sync, events
+    assert led.total("apply") == sync, (led.total("apply"), sync)
+    return states, led.total("apply"), events
 
 
 def _assert_equal(fleet, states):

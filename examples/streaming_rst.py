@@ -84,6 +84,7 @@ def main() -> None:
     track_biconnectivity()
     serve_queries()
     survive_faults()
+    observe_everything()
 
 
 def track_biconnectivity():
@@ -204,6 +205,42 @@ def survive_faults():
         print(f"  {'':15s}  healed via {info['mode']!r}, "
               f"final audit: {audit_forest(state, tn, bcc).summary()}")
         assert bool(audit_forest(state, tn, bcc).healthy)
+
+
+def observe_everything():
+    """Observability: the same stream, now with the §14 layer watching.
+
+    A ``SyncLedger`` is ambient — install it, run unchanged library
+    code, and every convergence loop's sync bill lands per phase.
+    A ``Tracer`` adds wall-clock spans on top (and exports JSONL +
+    Perfetto-loadable Chrome JSON via ``--trace-out`` in the serving
+    loops). Instrumentation is free: the counters already ride the
+    compiled loops' carries, so the forest is bit-identical with the
+    tracer on or off (DESIGN.md §14).
+    """
+    from repro import obs
+
+    g = grid2d(24)
+    stream = churn(g, batch=48, n_batches=8, seed=4)
+    print("\n=== observability: ledger + spans over grid 24x24 ===")
+
+    tracer = obs.Tracer()
+    with tracer:
+        state = init_state(stream)
+        tn = None
+        for step, b in enumerate(stream.batches):
+            with obs.span("tick", step=step):
+                state, _ = replay_batch(state, b)
+                if (step + 1) % 4 == 0:
+                    tn, state = refresh_tour(state, tn)
+
+    budget = tracer.summary()["sync_by_phase"]
+    print(f"  sync budget per phase: {budget}")
+    ticks = tracer.spans("tick")
+    ms = sorted(t["dur"] / 1e3 for t in ticks)
+    print(f"  {len(ticks)} ticks, p50 {ms[len(ms) // 2]:.1f} ms, "
+          f"total syncs {tracer.ledger.total()}")
+    assert budget["apply"] > 0 and budget["refresh_tour"] > 0
 
 
 if __name__ == "__main__":

@@ -152,4 +152,25 @@ if t8_pairs == 0:
              "to compare")
 EOF
 
-echo "bench_smoke: ok (table3 + table4_dynamic + table5_dynamic_bcc + table6_robustness + table7_queries + table8_fleet rows present; incremental BCC, scoped-repair, amortized-query, and fleet sync counts ahead)"
+# Provenance (DESIGN.md §14): every record must carry the meta stamp
+# that makes a perf-trajectory point attributable to a commit + backend.
+python - <<'EOF'
+import json, sys
+
+records = json.load(open("BENCH_rst.json"))
+names = [r["name"] for r in records]
+assert names == sorted(names), "BENCH_rst.json records not name-sorted"
+for r in records:
+    meta = r.get("meta")
+    assert meta, f"record {r['name']} missing meta"
+    for k in ("git_sha", "jax_version", "backend", "device_kind",
+              "schema_version"):
+        assert k in meta, f"record {r['name']} meta missing {k}"
+print(f"bench_smoke: provenance meta on all {len(records)} records "
+      f"(git_sha={records[0]['meta']['git_sha']}, "
+      f"backend={records[0]['meta']['backend']})")
+EOF
+
+sh scripts/obs_smoke.sh
+
+echo "bench_smoke: ok (table3 + table4_dynamic + table5_dynamic_bcc + table6_robustness + table7_queries + table8_fleet rows present; incremental BCC, scoped-repair, amortized-query, and fleet sync counts ahead; provenance meta + obs exports land)"

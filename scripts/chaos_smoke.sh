@@ -14,11 +14,41 @@ PY="${PYTHON:-python}"
 export PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
 
 echo "chaos_smoke: full-ladder soak (all injectors, audit@4, sanitize)"
+OBS_DIR=$(mktemp -d)
 $PY -m repro.launch.serve_stream \
     --graph grid_64 --stream churn --batch 64 --steps 24 \
     --tour incremental --tour-every 4 --bcc incremental \
     --chaos all --chaos-every 4 --audit-every 4 --sanitize \
+    --trace-out "$OBS_DIR/trace.jsonl" \
     --validate
+
+# The self-healing ladder's decisions are structured obs events
+# (DESIGN.md §14) — assert the soak's trace shows the audit actually
+# caught faults and every recovery carries a mode + escalation reason.
+$PY - "$OBS_DIR/trace.jsonl" <<'EOF'
+import sys
+sys.path.insert(0, "src")
+from repro.obs import read_jsonl
+
+records = read_jsonl(sys.argv[1])
+events = [r for r in records if r["type"] == "event"]
+violations = [e for e in events if e["name"] == "audit_violation"]
+recoveries = [e for e in events if e["name"] == "recovery"]
+assert violations, "chaos soak trace has no audit_violation events"
+assert recoveries, "chaos soak trace has no recovery events"
+for e in violations:
+    assert e["args"]["violations"], f"empty violation list: {e}"
+    assert e["args"]["n_violating"] > 0, e
+for e in recoveries:
+    assert e["args"]["mode"] in ("scoped", "full", "refresh"), e
+    assert e["args"]["reason"] in (
+        "scoped_repair", "sever_insufficient", "reaudit_failed",
+        "caches_stale"), e
+print(f"chaos_smoke: trace ok ({len(violations)} audit_violation, "
+      f"{len(recoveries)} recovery events; modes="
+      f"{sorted({e['args']['mode'] for e in recoveries})})")
+EOF
+rm -rf "$OBS_DIR"
 
 echo "chaos_smoke: kill + resume under chaos (checkpoint at batch 8)"
 CKPT=$(mktemp -d)

@@ -193,9 +193,9 @@ class TourNumbering:
         return cls(*children)
 
 
-@partial(jax.jit, static_argnames=("use_kernel",))
-def tour_numbering(parent: jnp.ndarray, *,
-                   use_kernel: bool = False) -> TourNumbering:
+@partial(jax.jit, static_argnames=("use_kernel", "return_syncs"))
+def tour_numbering(parent: jnp.ndarray, *, use_kernel: bool = False,
+                   return_syncs: bool = False) -> TourNumbering:
     """First/last-visit numbering of a rooted forest's Euler tour.
 
     Consumes the parent array of *any* RST pipeline (BFS / GConn+Euler /
@@ -211,15 +211,20 @@ def tour_numbering(parent: jnp.ndarray, *,
       parent: int32[n] parent table. Roots self-point; negative entries
         (BFS's unreachable −1) are treated as self-rooted singletons.
       use_kernel: route list ranking through the Pallas list_rank kernel.
+      return_syncs: also return the engine convergence-check count
+        (rooting compression + list ranking). The counters already ride
+        both loops' carries, so requesting them is free — the obs-layer
+        wrappers always do (DESIGN.md §14).
 
     Returns:
       TourNumbering (pre / size / last / comp / parent, all int32[n]).
+      With ``return_syncs``: (numbering, int32 sync count).
     """
     n = parent.shape[0]
     verts = jnp.arange(n, dtype=jnp.int32)
     par = jnp.where(parent < 0, verts, parent.astype(jnp.int32))
     nonroot = par != verts
-    comp = roots_of(par)
+    comp, root_syncs = roots_of(par, return_syncs=True)
 
     # One tree-edge slot per vertex: slot v = (v, parent[v]), invalid at
     # roots. Directed slot v is the closing edge v→parent ("up"), slot
@@ -228,7 +233,8 @@ def tour_numbering(parent: jnp.ndarray, *,
     fu = jnp.where(nonroot, verts, sentinel)
     fv = jnp.where(nonroot, par, sentinel)
     succ, dvalid = _tour_successors(n, fu, fv, nonroot, comp)
-    d = wyllie_rank(succ, dvalid, use_kernel=use_kernel)
+    d, rank_syncs = wyllie_rank(succ, dvalid, use_kernel=use_kernel,
+                                return_syncs=True)
     d_up, d_down = d[:n], d[n:]
 
     # Subtree size: the tour segment [discovery(v), closing(v)] holds both
@@ -243,5 +249,8 @@ def tour_numbering(parent: jnp.ndarray, *,
     order = jnp.lexsort((key, comp)).astype(jnp.int32)
     pre = jnp.zeros((n,), jnp.int32).at[order].set(verts)
 
-    return TourNumbering(pre=pre, size=size, last=pre + size - 1,
-                         comp=comp, parent=par)
+    tn = TourNumbering(pre=pre, size=size, last=pre + size - 1,
+                       comp=comp, parent=par)
+    if return_syncs:
+        return tn, root_syncs + rank_syncs
+    return tn

@@ -84,14 +84,11 @@ class QueryTables:
 
 
 @partial(jax.jit, static_argnames=("n_jumps",))
-def build_tables(tn: TourNumbering, *,
-                 n_jumps: int = DEFAULT_JUMPS) -> QueryTables:
-    """Build the query index from a (fresh) tour numbering.
-
-    One ``rank_to_root`` pass for depths plus ``levels = ⌈log2 n⌉``
-    sync-free ``p = p[p]`` doublings for the ancestor table — after
-    this, every query in the module is gathers only.
-    """
+def _build_tables(tn: TourNumbering, *,
+                  n_jumps: int = DEFAULT_JUMPS) -> QueryTables:
+    """Jitted table build — vmap-safe (no host recording). Batched
+    callers (``dynamic.fleet.build_fleet_tables``) vmap THIS and report
+    to the ledger themselves at host level."""
     par = tn.parent
     n = par.shape[0]
     depth, _root, syncs = rank_to_root(par, n_jumps=n_jumps,
@@ -105,6 +102,25 @@ def build_tables(tn: TourNumbering, *,
     return QueryTables(pre=tn.pre, last=tn.last, comp=tn.comp, parent=par,
                        depth=depth, up=jnp.stack(rows),
                        build_syncs=syncs + jnp.int32(levels))
+
+
+def build_tables(tn: TourNumbering, *,
+                 n_jumps: int = DEFAULT_JUMPS) -> QueryTables:
+    """Build the query index from a (fresh) tour numbering.
+
+    One ``rank_to_root`` pass for depths plus ``levels = ⌈log2 n⌉``
+    sync-free ``p = p[p]`` doublings for the ancestor table — after
+    this, every query in the module is gathers only.
+
+    Host wrapper over the jitted build: reports ``build_syncs`` to the
+    ambient ``obs`` ledger (phase ``build_tables``) — lazily, so
+    unrecorded runs never pull the scalar to host (DESIGN.md §14).
+    """
+    from repro import obs
+
+    tables = _build_tables(tn, n_jumps=n_jumps)
+    obs.record("build_tables", lambda: int(tables.build_syncs))
+    return tables
 
 
 def _ok(x: jnp.ndarray, n: int) -> jnp.ndarray:

@@ -126,15 +126,20 @@ class AuditReport:
     def tree_unflatten(cls, aux, children):
         return cls(aux, *children)
 
+    #: the individually-reportable verdicts, in report order.
+    VERDICTS = ("acyclic", "roots_fixed", "rep_consistent",
+                "tree_cover_ok", "tree_slots_ok", "spanning_ok",
+                "counts_ok", "tour_fresh", "bcc_fresh")
+
+    def violations(self) -> list[str]:
+        """Names of the failed verdicts (host-side; empty when healthy)."""
+        return [k for k in self.VERDICTS if not bool(getattr(self, k))]
+
     def summary(self) -> str:
         """One-line human verdict (host-side)."""
         if bool(self.healthy):
             return f"healthy (syncs={int(self.syncs)})"
-        bad = [k for k in ("acyclic", "roots_fixed", "rep_consistent",
-                           "tree_cover_ok", "tree_slots_ok", "spanning_ok",
-                           "counts_ok", "tour_fresh", "bcc_fresh")
-               if not bool(getattr(self, k))]
-        return (f"FAULT {'+'.join(bad)} "
+        return (f"FAULT {'+'.join(self.violations())} "
                 f"({int(self.n_violating)} vertices in scope, "
                 f"syncs={int(self.syncs)})")
 
@@ -279,5 +284,12 @@ def audit_forest(state: DynamicForest, tn: TourNumbering | None = None,
       AuditReport; ``report.healthy`` is the single go/no-go bit,
       ``report.comp_violating`` the scope ``recovery.repair_forest``
       rebuilds, ``report.stale`` the scope whose caches must refresh.
+
+    Host wrapper over the jitted audit: reports ``report.syncs`` to the
+    ambient ``obs`` ledger under the ``audit`` phase.
     """
-    return _audit(state, tn, bcc, n_jumps=n_jumps)
+    from repro import obs
+
+    report = _audit(state, tn, bcc, n_jumps=n_jumps)
+    obs.record("audit", lambda: int(report.syncs))
+    return report

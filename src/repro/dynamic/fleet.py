@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs
 from repro.core import queries as q
 from repro.core.compress import DEFAULT_JUMPS
 from repro.core.euler import TourNumbering, tour_numbering
@@ -182,6 +183,16 @@ def _replay_one(forest: DynamicForest, ins_u, ins_v, del_u, del_v, *,
 
 
 @partial(jax.jit, static_argnames=("n_jumps", "use_kernel"))
+def _apply_batches(fleet: ForestFleet, ins_u: jnp.ndarray,
+                   ins_v: jnp.ndarray, del_u: jnp.ndarray,
+                   del_v: jnp.ndarray, *, n_jumps: int = DEFAULT_JUMPS,
+                   use_kernel: bool = False):
+    fn = partial(_replay_one, n_jumps=n_jumps, use_kernel=use_kernel)
+    forest, stats = jax.vmap(fn)(fleet.as_forest(), ins_u, ins_v,
+                                 del_u, del_v)
+    return fleet.with_forest(forest), stats
+
+
 def apply_batches(fleet: ForestFleet, ins_u: jnp.ndarray,
                   ins_v: jnp.ndarray, del_u: jnp.ndarray,
                   del_v: jnp.ndarray, *, n_jumps: int = DEFAULT_JUMPS,
@@ -199,11 +210,15 @@ def apply_batches(fleet: ForestFleet, ins_u: jnp.ndarray,
       ``deletes_found``) to int32[T] arrays. The vmapped link loop runs
       ``max_t(rounds_t)`` productive rounds; each lane's result is
       bit-identical to applying its batch alone.
+
+    Host wrapper over the jitted block apply: reports the tick's sync
+    bill (``fleet_sync_cost``) to the ambient ``obs`` ledger under the
+    ``fleet_apply`` phase.
     """
-    fn = partial(_replay_one, n_jumps=n_jumps, use_kernel=use_kernel)
-    forest, stats = jax.vmap(fn)(fleet.as_forest(), ins_u, ins_v,
-                                 del_u, del_v)
-    return fleet.with_forest(forest), stats
+    fleet, stats = _apply_batches(fleet, ins_u, ins_v, del_u, del_v,
+                                  n_jumps=n_jumps, use_kernel=use_kernel)
+    obs.record("fleet_apply", lambda: fleet_sync_cost(stats))
+    return fleet, stats
 
 
 def fleet_sync_cost(stats) -> int:
@@ -222,17 +237,20 @@ def refresh_tours(fleet: ForestFleet, cached: TourNumbering | None = None,
     ``cached`` is the stacked numbering from the previous call (lane t
     of the result is bit-identical to single-tenant ``refresh_tour`` on
     tenant t). Returns ``(numbering[T], fleet')`` with all dirty masks
-    cleared.
+    cleared. Reports the vmapped refresh's sync bill (max over lanes —
+    the loops run lockstep until every lane converges) to the ambient
+    ``obs`` ledger under ``fleet_refresh_tour``.
     """
     from repro.dynamic.tour import _merge_dirty
 
     if cached is None or not incremental:
-        tn = jax.vmap(lambda p: tour_numbering(p, use_kernel=use_kernel))(
-            fleet.parent)
+        tn, syncs = jax.vmap(lambda p: tour_numbering(
+            p, use_kernel=use_kernel, return_syncs=True))(fleet.parent)
     else:
-        tn = jax.vmap(lambda p, r, d, c: _merge_dirty(
-            p, r, d, c, use_kernel=use_kernel))(
+        tn, syncs = jax.vmap(lambda p, r, d, c: _merge_dirty(
+            p, r, d, c, use_kernel=use_kernel, return_syncs=True))(
                 fleet.parent, fleet.rep, fleet.dirty, cached)
+    obs.record("fleet_refresh_tour", lambda: int(jnp.max(syncs)))
     return tn, dataclasses.replace(
         fleet, dirty=jnp.zeros_like(fleet.dirty))
 
@@ -240,20 +258,38 @@ def refresh_tours(fleet: ForestFleet, cached: TourNumbering | None = None,
 def refresh_bccs(fleet: ForestFleet, cached: DynamicBCC | None = None, *,
                  tour: TourNumbering, incremental: bool = True,
                  use_kernel: bool = False) -> DynamicBCC:
-    """Vmapped ``refresh_bcc`` over the fleet (stacked ``DynamicBCC``)."""
+    """Vmapped ``refresh_bcc`` over the fleet (stacked ``DynamicBCC``).
+
+    Reports the refresh's sync bill (max over lanes of
+    ``seg_syncs + aux_rounds``) to the ambient ``obs`` ledger under
+    ``fleet_refresh_bcc``.
+    """
     forest = fleet.as_forest()
     if cached is None or not incremental:
-        return jax.vmap(lambda f, t: _refresh_full(
+        bcc = jax.vmap(lambda f, t: _refresh_full(
             f, t, use_kernel=use_kernel))(forest, tour)
-    return jax.vmap(lambda f, t, c: _refresh_incremental(
-        f, t, c, use_kernel=use_kernel))(forest, tour, cached)
+    else:
+        bcc = jax.vmap(lambda f, t, c: _refresh_incremental(
+            f, t, c, use_kernel=use_kernel))(forest, tour, cached)
+    obs.record("fleet_refresh_bcc",
+               lambda: int(jnp.max(bcc.seg_syncs + bcc.aux_rounds)))
+    return bcc
 
 
 def build_fleet_tables(tn: TourNumbering, *,
                        n_jumps: int = DEFAULT_JUMPS) -> QueryTables:
     """Vmapped §12 ``build_tables``: one stacked query index, built in
-    one program (``build_syncs`` is per-tenant, int32[T])."""
-    return jax.vmap(lambda t: build_tables(t, n_jumps=n_jumps))(tn)
+    one program (``build_syncs`` is per-tenant, int32[T]).
+
+    Vmaps the jitted ``_build_tables`` (the host-recording wrapper
+    cannot be vmapped) and reports the stacked build's sync bill (max
+    over lanes) to the ambient ``obs`` ledger under ``fleet_tables``.
+    """
+    from repro.core.queries import _build_tables
+
+    tables = jax.vmap(lambda t: _build_tables(t, n_jumps=n_jumps))(tn)
+    obs.record("fleet_tables", lambda: int(jnp.max(tables.build_syncs)))
+    return tables
 
 
 # -- per-tenant read sessions over the stacked tables -------------------------
@@ -326,7 +362,10 @@ class FleetQuerySession:
     def rebuild_tenant(self, fleet: ForestFleet, t: int) -> None:
         """Re-index ONE tenant: single-lane tour + tables, scattered
         into the stacked index with ``.at[t].set`` (other lanes frozen)."""
-        tn_t = tour_numbering(fleet.parent[t], use_kernel=self.use_kernel)
+        tn_t, tn_syncs = tour_numbering(fleet.parent[t],
+                                        use_kernel=self.use_kernel,
+                                        return_syncs=True)
+        obs.record("refresh_tour", tn_syncs, tenant=t)
         tab_t = build_tables(tn_t, n_jumps=self.n_jumps)
         self.tables = jax.tree_util.tree_map(
             lambda full, new: full.at[t].set(new), self.tables, tab_t)

@@ -45,6 +45,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.core.compress import DEFAULT_JUMPS, compress_scoped
 from repro.core.connectivity import connected_components
 from repro.core.euler import euler_tour_root
@@ -176,10 +177,13 @@ def repair_forest(state: DynamicForest, report: AuditReport, *,
       dropped for out-of-range endpoints), and ``sync_total``
       (scoped-compression + overlay-compression convergence checks +
       link rounds — the scoped-recovery cost ``table6_robustness``
-      compares against ``rebuild_forest``).
+      compares against ``rebuild_forest``). ``sync_total`` is also
+      reported to the ambient ``obs`` ledger under ``repair``.
     """
-    return _repair(state, report.sever, report.comp_violating,
-                   n_jumps=n_jumps, use_kernel=use_kernel)
+    state, stats = _repair(state, report.sever, report.comp_violating,
+                           n_jumps=n_jumps, use_kernel=use_kernel)
+    obs.record("repair", lambda: int(stats["sync_total"]))
+    return state, stats
 
 
 @jax.jit
@@ -262,9 +266,12 @@ def rebuild_forest(state: DynamicForest, *, use_kernel: bool = False):
     Returns:
       (state', stats) — ``cc_rounds`` (hook/compress rounds),
       ``rank_syncs`` (list-ranking convergence checks),
-      ``quarantined_slots``, and ``sync_total = cc_rounds + rank_syncs``.
+      ``quarantined_slots``, and ``sync_total = cc_rounds + rank_syncs``
+      (also reported to the ambient ``obs`` ledger under ``rebuild``).
     """
-    return _rebuild(state, use_kernel=use_kernel)
+    state, stats = _rebuild(state, use_kernel=use_kernel)
+    obs.record("rebuild", lambda: int(stats["sync_total"]))
+    return state, stats
 
 
 def recover(state: DynamicForest, tn=None, bcc=None, *,
@@ -289,8 +296,15 @@ def recover(state: DynamicForest, tn=None, bcc=None, *,
       (state', tn', bcc', report, info) — ``report`` is the *initial*
       audit; ``info`` is a host-side dict: ``mode`` in
       {"clean", "refresh", "scoped", "full"}, ``n_violating``,
-      ``audit_syncs``, and the repair/rebuild stats that ran
-      (``repair_sync_total`` / ``rebuild_sync_total``).
+      ``audit_syncs``, the repair/rebuild stats that ran
+      (``repair_sync_total`` / ``rebuild_sync_total``), and — for any
+      non-clean outcome — the escalation ``reason``.
+
+    When a tracer is installed (``obs.Tracer``), every non-clean pass
+    emits structured events: ``audit_violation`` (the failed verdict
+    names + violation count) and ``recovery`` (the ladder outcome —
+    mode + escalation reason), so a trace file is enough to reconstruct
+    the recovery ladder (scripts/chaos_smoke.sh asserts exactly that).
     """
     report = audit_forest(state, tn, bcc, n_jumps=n_jumps)
     info = {"mode": "clean", "n_violating": int(report.n_violating),
@@ -298,18 +312,24 @@ def recover(state: DynamicForest, tn=None, bcc=None, *,
     if bool(report.healthy):
         return state, tn, bcc, report, info
 
+    obs.event("audit_violation", violations=report.violations(),
+              n_violating=int(report.n_violating),
+              syncs=int(report.syncs))
     if not bool(report.forest_ok):
         viable = bool(_post_sever_acyclic(state, report.sever))
         if viable:
             state, rstats = repair_forest(state, report, n_jumps=n_jumps,
                                           use_kernel=use_kernel)
             info["mode"] = "scoped"
+            info["reason"] = "scoped_repair"
             info["repair_sync_total"] = int(rstats["sync_total"])
             info["repaired"] = int(rstats["repaired"])
         if not viable or not bool(
                 audit_forest(state, n_jumps=n_jumps).forest_ok):
             state, bstats = rebuild_forest(state, use_kernel=use_kernel)
             info["mode"] = "full"
+            info["reason"] = ("sever_insufficient" if not viable
+                              else "reaudit_failed")
             info["rebuild_sync_total"] = int(bstats["sync_total"])
             tn = None       # nothing cached survives a full rebuild
             bcc = None
@@ -320,6 +340,9 @@ def recover(state: DynamicForest, tn=None, bcc=None, *,
                     + final.summary())
     else:
         info["mode"] = "refresh"        # structure fine, caches stale
+        info["reason"] = "caches_stale"
+    obs.event("recovery", mode=info["mode"], reason=info["reason"],
+              n_violating=info["n_violating"])
 
     # Heal the caches. Staleness beyond the repair scope (a rotted
     # snapshot in an otherwise-clean component) must also land in the

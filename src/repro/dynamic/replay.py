@@ -9,6 +9,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
+from repro import obs
 from repro.data.streams import EdgeStream, StreamBatch
 from repro.dynamic.forest import (DynamicForest, apply_batch, edge_slots,
                                   forest_empty)
@@ -49,4 +50,7 @@ def replay_batch(state: DynamicForest, b: StreamBatch, **kwargs):
     state, stats = apply_batch(state, jnp.asarray(b.ins_u),
                                jnp.asarray(b.ins_v), dmask, **kwargs)
     stats["deletes_found"] = jnp.sum(found.astype(jnp.int32))
+    # rounds + 1: GConn rounds plus the final convergence check — the
+    # same per-batch sync accounting the table4/table8 baselines use.
+    obs.record("apply", lambda: int(stats["rounds"]) + 1)
     return state, stats

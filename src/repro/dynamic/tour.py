@@ -44,16 +44,18 @@ def _clear_dirty(state: DynamicForest) -> DynamicForest:
         state, dirty=jnp.zeros((state.n_nodes,), jnp.bool_))
 
 
-@partial(jax.jit, static_argnames=("use_kernel",))
+@partial(jax.jit, static_argnames=("use_kernel", "return_syncs"))
 def _merge_dirty(parent, rep, dirty, cached: TourNumbering, *,
-                 use_kernel: bool = False) -> TourNumbering:
+                 use_kernel: bool = False,
+                 return_syncs: bool = False) -> TourNumbering:
     n = parent.shape[0]
     verts = jnp.arange(n, dtype=jnp.int32)
 
     # Rank only the dirty sub-forest: clean vertices become singletons,
     # whose Euler lists are empty (zero doubling work).
     masked = jnp.where(dirty, parent, verts)
-    fresh = tour_numbering(masked, use_kernel=use_kernel)
+    fresh, syncs = tour_numbering(masked, use_kernel=use_kernel,
+                                  return_syncs=True)
 
     # Per-component preorder keys: fresh where dirty, cached where clean.
     # Keys are only ever compared within one component (lexsort is
@@ -62,8 +64,11 @@ def _merge_dirty(parent, rep, dirty, cached: TourNumbering, *,
     order = jnp.lexsort((key, rep)).astype(jnp.int32)
     pre = jnp.zeros((n,), jnp.int32).at[order].set(verts)
     size = jnp.where(dirty, fresh.size, cached.size)
-    return TourNumbering(pre=pre, size=size, last=pre + size - 1,
-                         comp=rep, parent=parent)
+    tn = TourNumbering(pre=pre, size=size, last=pre + size - 1,
+                       comp=rep, parent=parent)
+    if return_syncs:
+        return tn, syncs
+    return tn
 
 
 def refresh_tour(state: DynamicForest,

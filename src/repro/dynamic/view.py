@@ -34,6 +34,7 @@ from typing import Any
 
 import jax
 
+from repro import obs
 from repro.core.euler import TourNumbering, tour_numbering
 from repro.dynamic.bcc import (DynamicBCC, _refresh_full,
                                _refresh_incremental)
@@ -89,12 +90,20 @@ def refresh_tour_once(state: DynamicForest,
     ``None``/``incremental=False`` recompute from scratch; otherwise the
     dirty-scoped merge — bit-identical either way. Returns
     ``(numbering, state')`` with the dirty mask cleared.
+
+    Sync accounting: the engine counters already ride both loops'
+    carries, so this wrapper always requests them and reports the count
+    to the ambient ``obs`` ledger — the compiled program is identical
+    whether or not anything is recording (DESIGN.md §14).
     """
     if cached is None or not incremental:
-        tn = tour_numbering(state.parent, use_kernel=use_kernel)
-        return tn, _clear_dirty(state)
-    tn = _merge_dirty(state.parent, state.rep, state.dirty, cached,
-                      use_kernel=use_kernel)
+        tn, syncs = tour_numbering(state.parent, use_kernel=use_kernel,
+                                   return_syncs=True)
+    else:
+        tn, syncs = _merge_dirty(state.parent, state.rep, state.dirty,
+                                 cached, use_kernel=use_kernel,
+                                 return_syncs=True)
+    obs.record("refresh_tour", syncs)
     return tn, _clear_dirty(state)
 
 
@@ -103,12 +112,24 @@ def refresh_bcc_once(state: DynamicForest,
                      tour: TourNumbering | None = None,
                      incremental: bool = True,
                      use_kernel: bool = False) -> DynamicBCC:
-    """One biconnectivity refresh (the §10 step; canonical home)."""
-    tn = tour if tour is not None else tour_numbering(
-        state.parent, use_kernel=use_kernel)
+    """One biconnectivity refresh (the §10 step; canonical home).
+
+    Reports the refresh's engine syncs (``seg_syncs + aux_rounds``, the
+    table5 accounting) to the ambient ``obs`` ledger.
+    """
+    if tour is not None:
+        tn = tour
+    else:
+        tn, tn_syncs = tour_numbering(state.parent, use_kernel=use_kernel,
+                                      return_syncs=True)
+        obs.record("refresh_tour", tn_syncs)
     if cached is None or not incremental:
-        return _refresh_full(state, tn, use_kernel=use_kernel)
-    return _refresh_incremental(state, tn, cached, use_kernel=use_kernel)
+        bcc = _refresh_full(state, tn, use_kernel=use_kernel)
+    else:
+        bcc = _refresh_incremental(state, tn, cached, use_kernel=use_kernel)
+    obs.record("refresh_bcc",
+               lambda: int(bcc.seg_syncs) + int(bcc.aux_rounds))
+    return bcc
 
 
 @dataclasses.dataclass
@@ -160,26 +181,29 @@ class ForestView:
         do_q = self.policy.queries if queries is None else queries
 
         if do_tour:
-            t0 = time.perf_counter()
-            mode = self.policy.tour if self.policy.tour != "off" \
-                else "incremental"
-            self.tn, state = refresh_tour_once(
-                state, self.tn, incremental=(mode == "incremental"),
-                use_kernel=self.use_kernel)
-            jax.block_until_ready(self.tn.pre)
-            self.tour_lat.append(time.perf_counter() - t0)
+            with obs.span("refresh_tour", step=step):
+                t0 = time.perf_counter()
+                mode = self.policy.tour if self.policy.tour != "off" \
+                    else "incremental"
+                self.tn, state = refresh_tour_once(
+                    state, self.tn, incremental=(mode == "incremental"),
+                    use_kernel=self.use_kernel)
+                jax.block_until_ready(self.tn.pre)
+                self.tour_lat.append(time.perf_counter() - t0)
         if do_bcc:
-            t0 = time.perf_counter()
-            mode = self.policy.bcc if self.policy.bcc != "off" \
-                else "incremental"
-            self.bcc = refresh_bcc_once(
-                state, self.bcc, tour=self.tn,
-                incremental=(mode == "incremental"),
-                use_kernel=self.use_kernel)
-            jax.block_until_ready(self.bcc.edge_bcc)
-            self.bcc_lat.append(time.perf_counter() - t0)
+            with obs.span("refresh_bcc", step=step):
+                t0 = time.perf_counter()
+                mode = self.policy.bcc if self.policy.bcc != "off" \
+                    else "incremental"
+                self.bcc = refresh_bcc_once(
+                    state, self.bcc, tour=self.tn,
+                    incremental=(mode == "incremental"),
+                    use_kernel=self.use_kernel)
+                jax.block_until_ready(self.bcc.edge_bcc)
+                self.bcc_lat.append(time.perf_counter() - t0)
         if do_q:
-            self.adopt_session(state)
+            with obs.span("adopt_session", step=step):
+                self.adopt_session(state)
         return state
 
     # -- query-session adoption (the §12 rebuild, folded here) ---------------

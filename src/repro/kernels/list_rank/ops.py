@@ -40,10 +40,11 @@ def list_rank_k(succ: jnp.ndarray, dist: jnp.ndarray, *, n_steps: int = 5,
     """One launch: (k+1)-hop chain prefix sum (see kernel docstring)."""
     if interpret is None:
         interpret = _auto_interpret()
-    succ2d, dist2d, n = pad_to_tile(succ, dist)
-    s, d = list_rank_pallas(succ2d, dist2d, n_steps=n_steps,
-                            interpret=interpret)
-    return s.reshape(-1)[:n], d.reshape(-1)[:n]
+    with jax.named_scope("list_rank_k"):
+        succ2d, dist2d, n = pad_to_tile(succ, dist)
+        s, d = list_rank_pallas(succ2d, dist2d, n_steps=n_steps,
+                                interpret=interpret)
+        return s.reshape(-1)[:n], d.reshape(-1)[:n]
 
 
 def list_rank(succ: jnp.ndarray, valid: jnp.ndarray, *, n_steps: int = 5,

@@ -44,9 +44,10 @@ def pointer_jump_k(p: jnp.ndarray, *, n_jumps: int = 5,
     """
     if interpret is None:
         interpret = _auto_interpret()
-    p2d, n = pad_to_tile(p)
-    out = pointer_jump_pallas(p2d, n_jumps=n_jumps, interpret=interpret)
-    return out.reshape(-1)[:n]
+    with jax.named_scope("pointer_jump_k"):
+        p2d, n = pad_to_tile(p)
+        out = pointer_jump_pallas(p2d, n_jumps=n_jumps, interpret=interpret)
+        return out.reshape(-1)[:n]
 
 
 @partial(jax.jit, static_argnames=("n_jumps", "interpret"))
@@ -59,8 +60,9 @@ def pointer_jump_double_k(p2d: jnp.ndarray, *, n_jumps: int = 5,
     """
     if interpret is None:
         interpret = _auto_interpret()
-    return pointer_jump_double_pallas(p2d, n_jumps=n_jumps,
-                                      interpret=interpret)
+    with jax.named_scope("pointer_jump_double_k"):
+        return pointer_jump_double_pallas(p2d, n_jumps=n_jumps,
+                                          interpret=interpret)
 
 
 def pointer_jump_until_converged(p: jnp.ndarray, *, n_jumps: int = 5,

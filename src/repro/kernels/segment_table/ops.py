@@ -30,15 +30,17 @@ def segment_table(values: jnp.ndarray, *, levels: int, op: str,
     """
     if interpret is None:
         interpret = _auto_interpret()
-    n = values.shape[0]
-    n_pad = -n % _TILE
-    if jnp.issubdtype(values.dtype, jnp.integer):
-        info = jnp.iinfo(values.dtype)
-    else:
-        info = jnp.finfo(values.dtype)
-    fill = info.max if op == "min" else info.min
-    v2d = jnp.concatenate(
-        [values, jnp.full((n_pad,), fill, values.dtype)]).reshape(-1, LANES)
-    out = segment_table_pallas(v2d, levels=levels, fill=fill, op=op,
-                               interpret=interpret)
-    return out.reshape(levels + 1, -1)[:, :n]
+    with jax.named_scope("segment_table"):
+        n = values.shape[0]
+        n_pad = -n % _TILE
+        if jnp.issubdtype(values.dtype, jnp.integer):
+            info = jnp.iinfo(values.dtype)
+        else:
+            info = jnp.finfo(values.dtype)
+        fill = info.max if op == "min" else info.min
+        v2d = jnp.concatenate(
+            [values,
+             jnp.full((n_pad,), fill, values.dtype)]).reshape(-1, LANES)
+        out = segment_table_pallas(v2d, levels=levels, fill=fill, op=op,
+                                   interpret=interpret)
+        return out.reshape(levels + 1, -1)[:, :n]

@@ -83,10 +83,19 @@ class CheckpointConfig:
     resume: bool = False
 
 
+@dataclasses.dataclass(frozen=True)
+class ObsConfig:
+    """Observability exports (DESIGN.md §14)."""
+
+    trace_out: str | None = None
+    metrics_out: str | None = None
+    metrics_every: int = 0
+
+
 #: (attribute on ServeConfig, sub-config class) — the schema, in flag order.
 _GROUPS = (("stream", StreamConfig), ("refresh", RefreshConfig),
            ("read", ReadConfig), ("chaos", ChaosConfig),
-           ("ckpt", CheckpointConfig))
+           ("ckpt", CheckpointConfig), ("obs", ObsConfig))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -100,6 +109,7 @@ class ServeConfig:
     chaos: ChaosConfig = dataclasses.field(default_factory=ChaosConfig)
     ckpt: CheckpointConfig = dataclasses.field(
         default_factory=CheckpointConfig)
+    obs: ObsConfig = dataclasses.field(default_factory=ObsConfig)
     validate: bool = False
 
     # -- argparse binding ----------------------------------------------------
@@ -175,6 +185,19 @@ class ServeConfig:
         g.add_argument("--resume", action="store_true",
                        help="resume from the newest checkpoint in "
                             "--ckpt-dir")
+
+        g = ap.add_argument_group("observability")
+        g.add_argument("--trace-out", default=ObsConfig.trace_out,
+                       help="write the span trace as JSONL here, plus "
+                            "Chrome trace-event JSON (Perfetto-loadable) "
+                            "at <path>.chrome.json (DESIGN.md §14)")
+        g.add_argument("--metrics-out", default=ObsConfig.metrics_out,
+                       help="write the metrics registry as JSON here at "
+                            "loop end (and every --metrics-every batches)")
+        g.add_argument("--metrics-every", type=int,
+                       default=ObsConfig.metrics_every,
+                       help="flush --metrics-out every k batches "
+                            "(0 = only at loop end)")
 
         ap.add_argument("--validate", action="store_true",
                         help="oracle-check the final forest")

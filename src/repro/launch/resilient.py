@@ -46,6 +46,7 @@ from typing import Any, Callable, Sequence
 import jax
 import numpy as np
 
+from repro import obs
 from repro.data.streams import EdgeStream
 from repro.dynamic.audit import audit_forest
 from repro.dynamic.chaos import INJECTORS, merge_quarantine, sanitize_batch
@@ -266,28 +267,36 @@ class ResilientStreamLoop:
     def step(self, step: int, batch):
         """Process one batch end to end (inject → sanitize → apply →
         refresh → audit → checkpoint); returns (stats, dt)."""
+        with obs.span("tick", step=step):
+            return self._step(step, batch)
+
+    def _step(self, step: int, batch):
         n = self.state.n_nodes
         if self.chaos and (step + 1) % max(self.chaos_every, 1) == 0:
-            self._inject(step)
+            with obs.span("inject", step=step):
+                self._inject(step)
         if self.chaos and not self._structural_guard():
-            self._recover(step)
+            with obs.span("audit_recover", step=step):
+                self._recover(step)
         if self.sanitize:
-            batch, q = sanitize_batch(batch, n)
-            merge_quarantine(self.quarantine, q)
+            with obs.span("sanitize", step=step):
+                batch, q = sanitize_batch(batch, n)
+                merge_quarantine(self.quarantine, q)
 
-        for attempt in range(self.max_retries + 1):
-            try:
-                new_state, stats, dt = self._watchdog_apply(batch)
-                break
-            except (StepTimeout, jax.errors.JaxRuntimeError) as e:
-                self.retries += 1
-                log.warning("batch %d attempt %d failed: %s",
-                            step, attempt, e)
-                if attempt == self.max_retries:
-                    # Publish a last checkpoint for the restart, then
-                    # hand the failure to the scheduler.
-                    self._save(blocking=True)
-                    raise
+        with obs.span("apply_batch", step=step):
+            for attempt in range(self.max_retries + 1):
+                try:
+                    new_state, stats, dt = self._watchdog_apply(batch)
+                    break
+                except (StepTimeout, jax.errors.JaxRuntimeError) as e:
+                    self.retries += 1
+                    log.warning("batch %d attempt %d failed: %s",
+                                step, attempt, e)
+                    if attempt == self.max_retries:
+                        # Publish a last checkpoint for the restart, then
+                        # hand the failure to the scheduler.
+                        self._save(blocking=True)
+                        raise
         self.state = new_state
         self.lat.append(dt)
 
@@ -309,14 +318,18 @@ class ResilientStreamLoop:
 
         # Cadenced cache maintenance: one ForestView entry refreshes
         # whatever the policy keeps on (tour, BCC) when the step is due.
+        # (ForestView.refresh opens the refresh_tour / refresh_bcc /
+        # adopt_session child spans itself.)
         self.state = self.view.refresh(self.state, step=step)
 
         if self.audit_every and (step + 1) % self.audit_every == 0:
-            self._recover(step)
+            with obs.span("audit_recover", step=step):
+                self._recover(step)
 
         self.cursor = step + 1
         if self.ckpt_every and (step + 1) % self.ckpt_every == 0:
-            self._save()
+            with obs.span("checkpoint", step=step):
+                self._save()
         return stats, dt
 
     def run(self, batches, *, on_batch=None):
@@ -331,7 +344,8 @@ class ResilientStreamLoop:
             if on_batch:
                 on_batch(step, stats, dt)
         if self.audit_every or self.chaos:
-            self._recover(len(batches))
+            with obs.span("audit_recover", step=len(batches)):
+                self._recover(len(batches))
         if self._writer is not None:
             self._writer.join()
             self._writer = None

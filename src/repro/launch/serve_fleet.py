@@ -32,18 +32,13 @@ turns into the §13 headline numbers.
 from __future__ import annotations
 
 import argparse
+import contextlib
 import tempfile
 import time
 
 import numpy as np
 
-
-def _percentiles(samples, unit_ms=1e3) -> str:
-    if not len(samples):
-        return "no samples"
-    ms = np.asarray(samples) * unit_ms
-    return f"p50 {np.percentile(ms, 50):6.2f} ms  p95 " \
-           f"{np.percentile(ms, 95):6.2f} ms"
+from repro import obs
 
 
 def main(argv=None) -> None:
@@ -134,73 +129,113 @@ def main(argv=None) -> None:
         read_per_tick = r / (1.0 - r) * cfg.stream.batch / cfg.read.read_batch
     read_debt = {t: 0.0 for t in range(fcfg.tenants)}
 
+    def snapshot_metrics() -> obs.MetricsRegistry:
+        """Fresh registry from the cumulative loop telemetry (rebuilt per
+        flush so monotonic counters never double-count)."""
+        m = obs.MetricsRegistry()
+        m.gauge("tenants").set(fcfg.tenants)
+        m.gauge("slots").set(n_slots)
+        m.counter("fleet_syncs").inc(sync_fleet)
+        m.counter("sequential_equiv_syncs").inc(sync_seq_equiv)
+        m.counter("admissions").inc(manager.admissions)
+        m.counter("evictions").inc(manager.evictions)
+        m.counter("restores").inc(manager.restores)
+        for s in refresh_lat:
+            m.histogram("refresh_ms").observe(s * 1e3)
+        for t in range(fcfg.tenants):
+            m.counter("applied_events", tenant=t).inc(applied[t])
+            for s in batch_lat[t]:
+                m.histogram("batch_latency_ms", tenant=t).observe(s * 1e3)
+            for s in query_lat[t]:
+                m.histogram("query_latency_ms", tenant=t).observe(s * 1e3)
+        return m
+
+    tracer = obs.Tracer() if cfg.obs.trace_out else None
+
     t_loop = time.perf_counter()
     tick = 0
-    while dispatcher.pending():
-        # Residency: every tenant with queued traffic gets a slot this
-        # tick if one is free; otherwise LRU eviction rotates them in.
-        waiting = [t for t in range(fcfg.tenants) if dispatcher.pending(t)]
-        for t in waiting[:n_slots]:
-            manager.ensure(t)
-        fleet = manager.fleet
+    with tracer if tracer is not None else contextlib.nullcontext():
+        while dispatcher.pending():
+            with obs.span("tick", step=tick):
+                # Residency: every tenant with queued traffic gets a slot
+                # this tick if one is free; otherwise LRU eviction rotates
+                # them in.
+                waiting = [t for t in range(fcfg.tenants)
+                           if dispatcher.pending(t)]
+                for t in waiting[:n_slots]:
+                    manager.ensure(t)
+                fleet = manager.fleet
 
-        (iu, iv, du, dv), served = dispatcher.tick(manager.tenant_at)
-        t0 = time.perf_counter()
-        fleet, stats = apply_batches(fleet, iu, iv, du, dv)
-        jax.block_until_ready(fleet.parent)
-        dt = time.perf_counter() - t0
-        manager.fleet = fleet
-        manager.note_applied(served)
+                (iu, iv, du, dv), served = dispatcher.tick(
+                    manager.tenant_at)
+                t0 = time.perf_counter()
+                with obs.span("apply_batch", step=tick,
+                              tenants=len(served)):
+                    fleet, stats = apply_batches(fleet, iu, iv, du, dv)
+                    jax.block_until_ready(fleet.parent)
+                dt = time.perf_counter() - t0
+                manager.fleet = fleet
+                manager.note_applied(served)
 
-        rounds = np.asarray(stats["rounds"])
-        sync_fleet += fleet_sync_cost(stats)
-        overflow = np.asarray(stats["overflow"])
-        found = np.asarray(stats["deletes_found"])
-        for tenant, events in served.items():
-            slot = manager.slot_of[tenant]
-            sync_seq_equiv += int(rounds[slot]) + 1
-            ins = int((np.asarray(iu[slot]) < n).sum())
-            applied[tenant] += (ins - int(overflow[slot])
-                                + int(found[slot]))
-            batch_lat[tenant].append(dt)
+                rounds = np.asarray(stats["rounds"])
+                sync_fleet += fleet_sync_cost(stats)
+                overflow = np.asarray(stats["overflow"])
+                found = np.asarray(stats["deletes_found"])
+                for tenant, events in served.items():
+                    slot = manager.slot_of[tenant]
+                    sync_seq_equiv += int(rounds[slot]) + 1
+                    ins = int((np.asarray(iu[slot]) < n).sum())
+                    applied[tenant] += (ins - int(overflow[slot])
+                                        + int(found[slot]))
+                    batch_lat[tenant].append(dt)
 
-        if cadence.tour != "off" and cadence.due(tick):
-            t0 = time.perf_counter()
-            tn, fleet = refresh_tours(
-                fleet, tn, incremental=(cadence.tour == "incremental"))
-            if cadence.bcc != "off":
-                bcc = refresh_bccs(
-                    fleet, bcc, tour=tn,
-                    incremental=(cadence.bcc == "incremental"))
-            jax.block_until_ready(tn.pre)
-            refresh_lat.append(time.perf_counter() - t0)
-            manager.fleet = fleet
-            if payload_reads:
-                if sess is None:
-                    sess = FleetQuerySession.from_fleet(
-                        fleet, tn, bcc, policy=cfg.read.query_staleness)
-                else:
-                    sess.restamp(fleet, tn, bcc)
-
-        if payload_reads and sess is not None:
-            from repro.dynamic.queries import StaleQueryError
-            for tenant in served:
-                slot = manager.slot_of[tenant]
-                read_debt[tenant] += read_per_tick
-                while read_debt[tenant] >= 1.0:
-                    read_debt[tenant] -= 1.0
-                    u = rng.integers(0, n, cfg.read.read_batch)
-                    v = rng.integers(0, n, cfg.read.read_batch)
+                if cadence.tour != "off" and cadence.due(tick):
                     t0 = time.perf_counter()
-                    try:
-                        out = sess.lca(fleet, slot, u, v) \
-                            if tick % 2 else sess.connected(fleet, slot,
-                                                            u, v)
-                    except StaleQueryError:
-                        continue
-                    jax.block_until_ready(out)
-                    query_lat[tenant].append(time.perf_counter() - t0)
-        tick += 1
+                    with obs.span("refresh_tour", step=tick):
+                        tn, fleet = refresh_tours(
+                            fleet, tn,
+                            incremental=(cadence.tour == "incremental"))
+                    if cadence.bcc != "off":
+                        with obs.span("refresh_bcc", step=tick):
+                            bcc = refresh_bccs(
+                                fleet, bcc, tour=tn,
+                                incremental=(cadence.bcc == "incremental"))
+                    jax.block_until_ready(tn.pre)
+                    refresh_lat.append(time.perf_counter() - t0)
+                    manager.fleet = fleet
+                    if payload_reads:
+                        if sess is None:
+                            sess = FleetQuerySession.from_fleet(
+                                fleet, tn, bcc,
+                                policy=cfg.read.query_staleness)
+                        else:
+                            sess.restamp(fleet, tn, bcc)
+
+                if payload_reads and sess is not None:
+                    from repro.dynamic.queries import StaleQueryError
+                    for tenant in served:
+                        slot = manager.slot_of[tenant]
+                        read_debt[tenant] += read_per_tick
+                        while read_debt[tenant] >= 1.0:
+                            read_debt[tenant] -= 1.0
+                            u = rng.integers(0, n, cfg.read.read_batch)
+                            v = rng.integers(0, n, cfg.read.read_batch)
+                            t0 = time.perf_counter()
+                            try:
+                                with obs.span("query_batch", step=tick,
+                                              tenant=tenant):
+                                    out = sess.lca(fleet, slot, u, v) \
+                                        if tick % 2 else sess.connected(
+                                            fleet, slot, u, v)
+                                    jax.block_until_ready(out)
+                            except StaleQueryError:
+                                continue
+                            query_lat[tenant].append(
+                                time.perf_counter() - t0)
+            if (cfg.obs.metrics_out and cfg.obs.metrics_every
+                    and (tick + 1) % cfg.obs.metrics_every == 0):
+                snapshot_metrics().write(cfg.obs.metrics_out)
+            tick += 1
     elapsed = time.perf_counter() - t_loop
 
     total_applied = sum(applied.values())
@@ -224,9 +259,9 @@ def main(argv=None) -> None:
     print("\nper-tenant:")
     for t in range(fcfg.tenants):
         line = (f"  tenant {t}: {applied[t]:6d} applied  "
-                f"batch {_percentiles(batch_lat[t])}")
+                f"batch {obs.percentile_line(batch_lat[t])}")
         if payload_reads:
-            line += f"  query {_percentiles(query_lat[t])}"
+            line += f"  query {obs.percentile_line(query_lat[t])}"
         print(line)
     if payload_reads and sess is not None:
         s = sess.sync_stats()
@@ -234,6 +269,16 @@ def main(argv=None) -> None:
               f"table builds, {s['build_syncs_total']} build syncs, "
               f"stale_served={s['stale_served']}, "
               f"auto_refreshes={s['auto_refreshes']}")
+
+    if tracer is not None:
+        tracer.write_jsonl(cfg.obs.trace_out)
+        tracer.write_chrome(cfg.obs.trace_out + ".chrome.json")
+        print(f"\ntrace: {len(tracer.records)} records -> "
+              f"{cfg.obs.trace_out} (+ .chrome.json); "
+              f"ledger sync_total={tracer.ledger.total()}")
+    if cfg.obs.metrics_out:
+        snapshot_metrics().write(cfg.obs.metrics_out)
+        print(f"metrics -> {cfg.obs.metrics_out}")
 
     if cfg.validate:
         from repro.core.compress import roots_of

@@ -46,13 +46,23 @@ read batch.
 The whole flag surface is the typed ``launch.config.ServeConfig`` schema
 (shared verbatim with ``serve_fleet``); this module binds it to argparse
 and hands the config object to ``ResilientStreamLoop.from_config``.
+
+The observability layer (DESIGN.md §14) rides the same loop:
+``--trace-out`` installs an ``obs.Tracer`` around the run — per-tick
+spans with wall-clock AND sync attribution, JSONL plus Perfetto-loadable
+Chrome JSON — and ``--metrics-out`` flushes an ``obs.MetricsRegistry``
+(counters/gauges/histograms) as JSON. Instrumentation is free when off
+and bit-identical when on (the zero-sync contract, tests/test_obs.py).
 """
 from __future__ import annotations
 
 import argparse
+import contextlib
 import time
 
 import numpy as np
+
+from repro import obs
 
 
 def canonical_partition(rep: np.ndarray) -> np.ndarray:
@@ -157,21 +167,18 @@ class _ReadDriver:
               + (f", {self.skipped_stale} batches skipped stale"
                  if self.skipped_stale else "") + ")")
         # Full op mix, in round-robin order: a short run may never reach
-        # the later ops — report "no samples" instead of handing
-        # np.percentile an empty list.
+        # the later ops — obs.percentile_line reports "no samples"
+        # instead of handing np.percentile an empty list (shared path
+        # with serve_fleet, regression-tested in tests/test_obs.py).
         sess = self.loop.view.session
         mix = self._ops(sess)
         extras = sorted(set(self.lat) - set(mix))
         for op in mix + extras:
-            samples = self.lat.get(op, ())
-            if not len(samples):
-                print(f"  {op:15s}: no samples (op never reached in "
-                      f"{self.batches} read batches)")
-                continue
-            ms = np.asarray(samples) * 1e3
-            print(f"  {op:15s}: p50 {np.percentile(ms, 50):7.2f} ms  "
-                  f"p95 {np.percentile(ms, 95):7.2f} ms  "
-                  f"({len(ms)} batches)")
+            line = obs.percentile_line(
+                self.lat.get(op, ()), width=7, count_suffix=True,
+                empty_reason=f"op never reached in {self.batches} "
+                             "read batches")
+            print(f"  {op:15s}: {line}")
         t = sess.sync_stats() if sess is not None else {
             "builds": 0, "build_syncs_total": 0, "stale_served": 0,
             "auto_refreshes": 0}
@@ -239,9 +246,41 @@ def main(argv=None) -> None:
 
     reads = _ReadDriver(loop, cfg, n) if cfg.read.read_ratio else None
 
+    def snapshot_metrics() -> "obs.MetricsRegistry":
+        """The loop's cumulative telemetry as one registry (rebuilt per
+        flush — every instrument reflects run-so-far totals)."""
+        m = obs.MetricsRegistry()
+        m.counter("applied_events").inc(loop.applied)
+        m.counter("dropped_overflow").inc(loop.dropped_overflow)
+        m.counter("dropped_unmatched").inc(loop.dropped_unmatched)
+        m.counter("retries").inc(loop.retries)
+        m.counter("faults_injected").inc(len(loop.injected))
+        m.counter("recoveries").inc(len(loop.recoveries))
+        for cat, count in sorted(loop.quarantine.items()):
+            m.counter("quarantined", category=cat).inc(count)
+        m.gauge("components").set(int(loop.state.n_components))
+        for name, samples in (("batch_latency_ms", loop.lat),
+                              ("tour_refresh_ms", loop.tour_lat),
+                              ("bcc_refresh_ms", loop.bcc_lat)):
+            h = m.histogram(name)
+            for s in samples:
+                h.observe(s * 1e3)
+        if reads is not None:
+            m.counter("read_batches").inc(reads.batches)
+            m.counter("reads_skipped_stale").inc(reads.skipped_stale)
+            for op, samples in sorted(reads.lat.items()):
+                h = m.histogram("query_latency_ms", op=op)
+                for s in samples:
+                    h.observe(s * 1e3)
+        return m
+
     def on_batch(step, stats, dt):
         if reads is not None:
-            reads.serve(step)
+            with obs.span("query_batch", step=step):
+                reads.serve(step)
+        if cfg.obs.metrics_out and cfg.obs.metrics_every \
+                and (step + 1) % cfg.obs.metrics_every == 0:
+            snapshot_metrics().write(cfg.obs.metrics_out)
         if step < 3 or (step + 1) % 8 == 0:
             line = (f"  batch {step:3d}: {dt*1e3:6.1f} ms  "
                     f"cuts={int(stats['cuts'])} links={int(stats['links'])} "
@@ -252,15 +291,16 @@ def main(argv=None) -> None:
                          f"bridges={int(loop.bcc.n_bridges)}")
             print(line)
 
+    tracer = obs.Tracer() if cfg.obs.trace_out else None
     t_loop = time.perf_counter()
-    state = loop.run(batches, on_batch=on_batch)
+    with tracer if tracer is not None else contextlib.nullcontext():
+        state = loop.run(batches, on_batch=on_batch)
     elapsed = time.perf_counter() - t_loop
 
     if not loop.lat:
         print("\nno batches applied (empty stream or --steps 0); "
               "nothing to report")
     else:
-        lat_ms = np.asarray(loop.lat) * 1e3
         print(f"\nsustained: {loop.applied / max(elapsed, 1e-9):,.0f} "
               f"updates/sec ({loop.applied} applied events / "
               f"{elapsed:.2f} s)")
@@ -269,8 +309,7 @@ def main(argv=None) -> None:
             print(f"dropped: {dropped} events excluded from the rate "
                   f"(pool overflow={loop.dropped_overflow}, "
                   f"unmatched deletes={loop.dropped_unmatched})")
-        print(f"batch latency: p50 {np.percentile(lat_ms, 50):.1f} ms, "
-              f"p95 {np.percentile(lat_ms, 95):.1f} ms")
+        print(f"batch latency: {obs.percentile_line(loop.lat)}")
         if loop.tour_lat:
             print(f"tour refresh ({cfg.refresh.tour}): median "
                   f"{np.median(loop.tour_lat)*1e3:.1f} ms over "
@@ -302,6 +341,17 @@ def main(argv=None) -> None:
                  if n_rec else ""))
         if loop.last_report is not None:
             print(f"final audit: {loop.last_report.summary()}")
+
+    if tracer is not None:
+        tracer.write_jsonl(cfg.obs.trace_out)
+        tracer.write_chrome(cfg.obs.trace_out + ".chrome.json")
+        s = tracer.summary()
+        print(f"trace: {s['span_count']} spans, "
+              f"sync_total={s['sync_total']} -> {cfg.obs.trace_out} "
+              f"(+ .chrome.json)")
+    if cfg.obs.metrics_out:
+        snapshot_metrics().write(cfg.obs.metrics_out)
+        print(f"metrics -> {cfg.obs.metrics_out}")
 
     if cfg.validate:
         from repro.core.compress import roots_of
