@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows:
                       vs per-read-batch recompute (DESIGN.md §12)
   table8_fleet/*      multi-tenant fleet: vmapped T-tenant apply vs T
                       sequential loops, sync accounting (DESIGN.md §13)
+  table9_buckets/*    shape-bucketed sub-fleets vs one wide schema at
+                      equal device-memory budget: sync + padded-slot
+                      work on a mixed tenant population (DESIGN.md §15)
   kernels/*           Pallas kernel micro-benchmarks (incl. compress_* engine
                       rows; interpret mode off-TPU)
   ablation_compress/* amortized vs per-hop convergence checks (engine k=5
@@ -111,7 +114,7 @@ def main(argv=None) -> None:
                             table1_steps, table2_stats, table3_bcc,
                             table4_dynamic, table5_dynamic_bcc,
                             table6_robustness, table7_queries,
-                            table8_fleet)
+                            table8_fleet, table9_buckets)
     from benchmarks.common import bench_meta, rows_to_records
     from repro.data import graphs as G
 
@@ -147,6 +150,7 @@ def main(argv=None) -> None:
     emit(table6_robustness.run(t6_suite))
     emit(table7_queries.run(suite))
     emit(table8_fleet.run(suite))
+    emit(table9_buckets.run(smoke=args.smoke))
     emit(ablation_hooking.run(suite))
     emit(kernel_microbench(micro_n))
     emit(compress_microbench(micro_n))

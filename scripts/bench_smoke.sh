@@ -5,15 +5,18 @@
 # (table4_dynamic/*, §9), and the incremental-BCC rows
 # (table5_dynamic_bcc/*, §10), the self-healing rows
 # (table6_robustness/*, §11), the query-serving rows
-# (table7_queries/*, §12), and the multi-tenant fleet rows
-# (table8_fleet/*, §13) actually landed so the downstream layers
+# (table7_queries/*, §12), the multi-tenant fleet rows
+# (table8_fleet/*, §13), and the shape-bucketed fleet rows
+# (table9_buckets/*, §15) actually landed so the downstream layers
 # can't silently drop out of the perf trajectory — and asserts the
 # *sync/round counts* of the incremental BCC refresh beat the full
 # recompute on the chain-regime sliding_window rows, of the scoped
 # fault repair beat the full rebuild on the single-fault (f1) rows,
 # of the amortized query tables beat the per-read-batch recompute
-# on the read-heavy table7 rows, and of the vmapped fleet's per-event
-# sync bill beat the sequential T-loop on every table8 pair.
+# on the read-heavy table7 rows, of the vmapped fleet's per-event
+# sync bill beat the sequential T-loop on every table8 pair, and of
+# the bucketed fleet's per-event sync bill AND padded slot-work beat
+# the equal-memory single-schema fleet on every table9 pair.
 # Wall-clock on the XLA-CPU CI backend is volume-bound, so the sync
 # counts are the device-independent advantage this guard keeps honest
 # without a GPU.
@@ -44,6 +47,10 @@ if ! grep -q '"name": "table7_queries/' BENCH_rst.json; then
 fi
 if ! grep -q '"name": "table8_fleet/' BENCH_rst.json; then
     echo "bench_smoke: no table8_fleet/* multi-tenant fleet row in BENCH_rst.json" >&2
+    exit 1
+fi
+if ! grep -q '"name": "table9_buckets/' BENCH_rst.json; then
+    echo "bench_smoke: no table9_buckets/* shape-bucketed fleet row in BENCH_rst.json" >&2
     exit 1
 fi
 
@@ -150,6 +157,38 @@ for name, rec in records.items():
 if t8_pairs == 0:
     sys.exit("bench_smoke: no fleet/sequential table8 row pairs found "
              "to compare")
+
+# Shape-bucketed sub-fleets (DESIGN.md §15): at equal device-memory
+# budget the bucketed fleet must beat the single wide schema on BOTH
+# per-event convergence syncs and padded slot-work (int32-rows ticked).
+def padded_rows(rec):
+    m = re.search(r"padded_rows=(\d+)", rec["derived"])
+    assert m, f"no padded_rows in {rec['name']}: {rec['derived']}"
+    return int(m.group(1))
+
+t9_pairs = 0
+for name, rec in records.items():
+    if not name.startswith("table9_buckets/"):
+        continue
+    if not name.endswith("/bucketed"):
+        continue
+    single = records.get(name[: -len("bucketed")] + "single_schema")
+    assert single is not None, f"missing single_schema twin for {name}"
+    sb, ss = sync_per_event(rec), sync_per_event(single)
+    if sb >= ss:
+        sys.exit(f"bench_smoke: bucketed sync amortization regressed: "
+                 f"{name} has sync_per_event={sb} >= single-schema {ss}")
+    pb, ps = padded_rows(rec), padded_rows(single)
+    if pb >= ps:
+        sys.exit(f"bench_smoke: bucketed padded slot-work regressed: "
+                 f"{name} has padded_rows={pb} >= single-schema {ps}")
+    print(f"bench_smoke: {name}: sync_per_event {sb} < single-schema "
+          f"{ss}; padded_rows {pb} < {ps}")
+    t9_pairs += 1
+
+if t9_pairs == 0:
+    sys.exit("bench_smoke: no bucketed/single_schema table9 row pairs "
+             "found to compare")
 EOF
 
 # Provenance (DESIGN.md §14): every record must carry the meta stamp
@@ -173,4 +212,4 @@ EOF
 
 sh scripts/obs_smoke.sh
 
-echo "bench_smoke: ok (table3 + table4_dynamic + table5_dynamic_bcc + table6_robustness + table7_queries + table8_fleet rows present; incremental BCC, scoped-repair, amortized-query, and fleet sync counts ahead; provenance meta + obs exports land)"
+echo "bench_smoke: ok (table3 + table4_dynamic + table5_dynamic_bcc + table6_robustness + table7_queries + table8_fleet + table9_buckets rows present; incremental BCC, scoped-repair, amortized-query, fleet, and bucketed-fleet sync counts ahead; provenance meta + obs exports land)"

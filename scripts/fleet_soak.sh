@@ -1,0 +1,32 @@
+#!/usr/bin/env sh
+# Bucketed-fleet soak (DESIGN.md §15): hundreds of tiny tenants routed
+# through two shape buckets with far fewer slots than tenants, so the
+# run leans hard on idle-LRU eviction, checkpoint-on-evict, async
+# admission, and cross-tick carryover (--drain 2) — then --validate
+# checks every tenant's final partition against a from-scratch RST.
+# Tenant counts are tunable for longer soaks:
+#
+#   SOAK_SMALL=500 SOAK_LARGE=200 sh scripts/fleet_soak.sh
+#
+# Defaults keep the soak CI-sized (a few minutes on the XLA-CPU
+# backend) while still rotating every slot many times over.
+set -e
+cd "$(dirname "$0")/.."
+PYTHONPATH="src:.${PYTHONPATH:+:$PYTHONPATH}"
+export PYTHONPATH
+
+SOAK_SMALL="${SOAK_SMALL:-120}"   # chain_16 tenants (tiny schema)
+SOAK_LARGE="${SOAK_LARGE:-80}"    # grid_8 tenants (wider schema)
+SOAK_SLOTS="${SOAK_SLOTS:-8}"     # slots per bucket — tenants >> slots
+
+EVICT_DIR=$(mktemp -d)
+trap 'rm -rf "$EVICT_DIR"' EXIT
+
+python -m repro.launch.serve_fleet \
+    --buckets "chain_16:${SOAK_SMALL}:${SOAK_SLOTS},grid_8:${SOAK_LARGE}:${SOAK_SLOTS}" \
+    --stream churn --batch 8 --steps 3 --drain 2 \
+    --tour incremental --tour-every 2 \
+    --evict-dir "$EVICT_DIR" \
+    --validate
+
+echo "fleet_soak: ok (${SOAK_SMALL}+${SOAK_LARGE} tenants through 2 buckets x ${SOAK_SLOTS} slots, validate green)"

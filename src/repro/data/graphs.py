@@ -103,3 +103,35 @@ SUITE = {
 def build_suite(names=None) -> dict[str, Graph]:
     names = names or list(SUITE)
     return {k: SUITE[k][0](**SUITE[k][1]) for k in names}
+
+
+def resolve_graph(name: str, seed: int = 0) -> Graph:
+    """Build a graph from a suite name or a parametric pattern.
+
+    Accepts every ``SUITE`` key plus the patterns ``chain_<n>``,
+    ``grid_<side>``, ``rmat_<scale>``, and ``er_<n>`` so fleet bucket
+    specs (``--buckets chain_64:12``, DESIGN.md §15) aren't limited to
+    the benchmark suite's sizes. Parametric ``rmat_<scale>`` uses
+    ``edge_factor=4`` (the small-session regime buckets target); suite
+    names keep their registered kwargs.
+    """
+    if name in SUITE:
+        factory, kwargs, _ = SUITE[name]
+        return factory(**kwargs)
+    kind, _, arg = name.partition("_")
+    if not arg.isdigit():
+        raise ValueError(
+            f"unknown graph {name!r}: not in SUITE ({', '.join(SUITE)}) "
+            f"and not a chain_<n>/grid_<side>/rmat_<scale>/er_<n> pattern")
+    k = int(arg)
+    if kind == "chain":
+        return chain(k, seed=seed)
+    if kind == "grid":
+        return grid2d(k, seed=seed)
+    if kind == "rmat":
+        return rmat(k, edge_factor=4, seed=seed)
+    if kind == "er":
+        return erdos_renyi(k, seed=seed)
+    raise ValueError(
+        f"unknown graph {name!r}: not in SUITE ({', '.join(SUITE)}) "
+        f"and not a chain_<n>/grid_<side>/rmat_<scale>/er_<n> pattern")

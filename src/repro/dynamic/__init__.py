@@ -9,7 +9,9 @@ auditing (``audit``), and the scoped-repair/rebuild ladder
 membership from the cached tour intervals (DESIGN.md §12). ``view``
 unifies the derived-cache refreshes behind ``ForestView`` + one
 ``CadencePolicy``; ``fleet`` lifts the whole loop to T tenants in one
-vmapped program (DESIGN.md §13). Edge-stream workloads live in
+vmapped program (DESIGN.md §13) and routes mixed-shape tenant
+populations into shape-bucketed sub-fleets (``FleetSchema`` /
+``BucketedFleet``, DESIGN.md §15). Edge-stream workloads live in
 ``repro.data.streams``; the serving loops in ``repro.launch.resilient``
 / ``repro.launch.serve_stream`` / ``repro.launch.serve_fleet``.
 """
@@ -18,11 +20,13 @@ from repro.dynamic.bcc import DynamicBCC, refresh_bcc
 from repro.dynamic.chaos import (INJECTORS, POLLUTERS, inject,
                                  merge_quarantine, pollute_stream,
                                  sanitize_batch)
-from repro.dynamic.fleet import (FleetDispatcher, FleetManager,
-                                 FleetQuerySession, ForestFleet,
-                                 apply_batches, build_fleet_tables,
-                                 fleet_empty, fleet_sync_cost,
-                                 refresh_bccs, refresh_tours, tenant_slice)
+from repro.dynamic.fleet import (BucketedFleet, FleetBucket,
+                                 FleetDispatcher, FleetManager,
+                                 FleetQuerySession, FleetSchema,
+                                 ForestFleet, apply_batches,
+                                 build_fleet_tables, fleet_empty,
+                                 fleet_sync_cost, refresh_bccs,
+                                 refresh_tours, tenant_slice)
 from repro.dynamic.forest import (DynamicForest, apply_batch, edge_slots,
                                   forest_empty, forest_from_graph,
                                   live_graph)
@@ -34,8 +38,9 @@ from repro.dynamic.view import (CadencePolicy, ForestView,
                                 refresh_bcc_once, refresh_tour_once)
 
 __all__ = [
-    "AuditReport", "CadencePolicy", "DynamicBCC", "DynamicForest",
-    "FleetDispatcher", "FleetManager", "FleetQuerySession", "ForestFleet",
+    "AuditReport", "BucketedFleet", "CadencePolicy", "DynamicBCC",
+    "DynamicForest", "FleetBucket", "FleetDispatcher", "FleetManager",
+    "FleetQuerySession", "FleetSchema", "ForestFleet",
     "ForestView", "INJECTORS", "POLLUTERS", "apply_batch", "apply_batches",
     "audit_forest", "build_fleet_tables", "edge_slots", "fleet_empty",
     "fleet_sync_cost", "forest_empty", "forest_from_graph", "init_state",

@@ -41,10 +41,11 @@ single static call to the whole dynamic read/write loop:
 from __future__ import annotations
 
 import collections
+import concurrent.futures
 import dataclasses
 import pathlib
 from functools import partial
-from typing import Any, Sequence
+from typing import Any, Callable, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +62,7 @@ from repro.dynamic.bcc import (DynamicBCC, _refresh_full,
 from repro.dynamic.forest import (DynamicForest, apply_batch, edge_slots,
                                   forest_empty)
 from repro.dynamic.queries import POLICIES, StaleQueryError
+from repro.dynamic.view import CadencePolicy
 from repro.train import checkpoint as ckpt
 
 
@@ -196,7 +198,7 @@ def _apply_batches(fleet: ForestFleet, ins_u: jnp.ndarray,
 def apply_batches(fleet: ForestFleet, ins_u: jnp.ndarray,
                   ins_v: jnp.ndarray, del_u: jnp.ndarray,
                   del_v: jnp.ndarray, *, n_jumps: int = DEFAULT_JUMPS,
-                  use_kernel: bool = False):
+                  use_kernel: bool = False, bucket: str | None = None):
     """Apply one ``(T, B)`` event block: one vmapped §9 batch per tenant.
 
     Args:
@@ -213,11 +215,13 @@ def apply_batches(fleet: ForestFleet, ins_u: jnp.ndarray,
 
     Host wrapper over the jitted block apply: reports the tick's sync
     bill (``fleet_sync_cost``) to the ambient ``obs`` ledger under the
-    ``fleet_apply`` phase.
+    ``fleet_apply`` phase (labeled with the sub-fleet ``bucket`` when
+    one is ticking, §15).
     """
     fleet, stats = _apply_batches(fleet, ins_u, ins_v, del_u, del_v,
                                   n_jumps=n_jumps, use_kernel=use_kernel)
-    obs.record("fleet_apply", lambda: fleet_sync_cost(stats))
+    obs.record("fleet_apply", lambda: fleet_sync_cost(stats),
+               bucket=bucket)
     return fleet, stats
 
 
@@ -231,7 +235,8 @@ def fleet_sync_cost(stats) -> int:
 # -- vmapped cache refreshes (§9 tour, §10 BCC, §12 tables) -------------------
 
 def refresh_tours(fleet: ForestFleet, cached: TourNumbering | None = None,
-                  *, incremental: bool = True, use_kernel: bool = False):
+                  *, incremental: bool = True, use_kernel: bool = False,
+                  bucket: str | None = None):
     """Vmapped ``refresh_tour`` over the fleet.
 
     ``cached`` is the stacked numbering from the previous call (lane t
@@ -250,14 +255,16 @@ def refresh_tours(fleet: ForestFleet, cached: TourNumbering | None = None,
         tn, syncs = jax.vmap(lambda p, r, d, c: _merge_dirty(
             p, r, d, c, use_kernel=use_kernel, return_syncs=True))(
                 fleet.parent, fleet.rep, fleet.dirty, cached)
-    obs.record("fleet_refresh_tour", lambda: int(jnp.max(syncs)))
+    obs.record("fleet_refresh_tour", lambda: int(jnp.max(syncs)),
+               bucket=bucket)
     return tn, dataclasses.replace(
         fleet, dirty=jnp.zeros_like(fleet.dirty))
 
 
 def refresh_bccs(fleet: ForestFleet, cached: DynamicBCC | None = None, *,
                  tour: TourNumbering, incremental: bool = True,
-                 use_kernel: bool = False) -> DynamicBCC:
+                 use_kernel: bool = False,
+                 bucket: str | None = None) -> DynamicBCC:
     """Vmapped ``refresh_bcc`` over the fleet (stacked ``DynamicBCC``).
 
     Reports the refresh's sync bill (max over lanes of
@@ -272,12 +279,13 @@ def refresh_bccs(fleet: ForestFleet, cached: DynamicBCC | None = None, *,
         bcc = jax.vmap(lambda f, t, c: _refresh_incremental(
             f, t, c, use_kernel=use_kernel))(forest, tour, cached)
     obs.record("fleet_refresh_bcc",
-               lambda: int(jnp.max(bcc.seg_syncs + bcc.aux_rounds)))
+               lambda: int(jnp.max(bcc.seg_syncs + bcc.aux_rounds)),
+               bucket=bucket)
     return bcc
 
 
-def build_fleet_tables(tn: TourNumbering, *,
-                       n_jumps: int = DEFAULT_JUMPS) -> QueryTables:
+def build_fleet_tables(tn: TourNumbering, *, n_jumps: int = DEFAULT_JUMPS,
+                       bucket: str | None = None) -> QueryTables:
     """Vmapped §12 ``build_tables``: one stacked query index, built in
     one program (``build_syncs`` is per-tenant, int32[T]).
 
@@ -288,7 +296,8 @@ def build_fleet_tables(tn: TourNumbering, *,
     from repro.core.queries import _build_tables
 
     tables = jax.vmap(lambda t: _build_tables(t, n_jumps=n_jumps))(tn)
-    obs.record("fleet_tables", lambda: int(jnp.max(tables.build_syncs)))
+    obs.record("fleet_tables", lambda: int(jnp.max(tables.build_syncs)),
+               bucket=bucket)
     return tables
 
 
@@ -319,11 +328,13 @@ class FleetQuerySession:
     policies: tuple[str, ...]
     use_kernel: bool = False
     n_jumps: int = DEFAULT_JUMPS
-    # per-tenant telemetry (host-side)
-    builds: np.ndarray = None
-    build_syncs_total: np.ndarray = None
-    stale_served: np.ndarray = None
-    auto_refreshes: np.ndarray = None
+    # per-tenant telemetry (host-side), keyed by STABLE tenant label —
+    # not slot index — so counters survive evict→re-admit rotation even
+    # when the tenant lands in a different slot. ``labels[slot]`` maps
+    # residency to label; the default identity labels reproduce PR 8's
+    # slot-indexed behavior exactly.
+    labels: list = None                  # slot → stable tenant id
+    stats: dict = None                   # label → Counter of telemetry
 
     @classmethod
     def from_fleet(cls, fleet: ForestFleet,
@@ -331,8 +342,11 @@ class FleetQuerySession:
                    bcc: DynamicBCC | None = None, *,
                    policy: str | Sequence[str] = "strict",
                    use_kernel: bool = False,
-                   n_jumps: int = DEFAULT_JUMPS) -> "FleetQuerySession":
+                   n_jumps: int = DEFAULT_JUMPS,
+                   labels: Sequence | None = None) -> "FleetQuerySession":
         t_slots = fleet.n_slots
+        if labels is not None and len(labels) != t_slots:
+            raise ValueError(f"{len(labels)} labels for {t_slots} slots")
         if isinstance(policy, str):
             policies = (policy,) * t_slots
         else:
@@ -350,12 +364,27 @@ class FleetQuerySession:
                    versions=np.asarray(fleet.version, np.int64).copy(),
                    policies=policies, use_kernel=use_kernel,
                    n_jumps=n_jumps,
-                   builds=np.ones(t_slots, np.int64),
-                   build_syncs_total=np.asarray(tables.build_syncs,
-                                                np.int64).copy(),
-                   stale_served=np.zeros(t_slots, np.int64),
-                   auto_refreshes=np.zeros(t_slots, np.int64))
+                   labels=(list(labels) if labels is not None
+                           else list(range(t_slots))), stats={})
+        build_syncs = np.asarray(tables.build_syncs, np.int64)
+        for s in range(t_slots):
+            sess._bump(sess.labels[s], builds=1,
+                       build_syncs_total=int(build_syncs[s]))
         return sess
+
+    # -- stable-label bookkeeping --------------------------------------------
+
+    def _bump(self, label, **deltas) -> None:
+        c = self.stats.setdefault(label, collections.Counter())
+        for k, v in deltas.items():
+            c[k] += int(v)
+
+    def set_label(self, slot: int, label) -> None:
+        """Bind ``slot`` to a stable tenant id. Telemetry for ``label``
+        accumulates across rotations — a re-admitted tenant's counters
+        continue from where eviction left them."""
+        self.labels[slot] = label
+        self.stats.setdefault(label, collections.Counter())
 
     # -- lifecycle -----------------------------------------------------------
 
@@ -365,7 +394,7 @@ class FleetQuerySession:
         tn_t, tn_syncs = tour_numbering(fleet.parent[t],
                                         use_kernel=self.use_kernel,
                                         return_syncs=True)
-        obs.record("refresh_tour", tn_syncs, tenant=t)
+        obs.record("refresh_tour", tn_syncs, tenant=self.labels[t])
         tab_t = build_tables(tn_t, n_jumps=self.n_jumps)
         self.tables = jax.tree_util.tree_map(
             lambda full, new: full.at[t].set(new), self.tables, tab_t)
@@ -375,8 +404,8 @@ class FleetQuerySession:
             self.bcc = jax.tree_util.tree_map(
                 lambda full, new: full.at[t].set(new), self.bcc, bcc_t)
         self.versions[t] = int(fleet.version[t])
-        self.builds[t] += 1
-        self.build_syncs_total[t] += int(tab_t.build_syncs)
+        self._bump(self.labels[t], builds=1,
+                   build_syncs_total=int(tab_t.build_syncs))
 
     def restamp(self, fleet: ForestFleet, tn: TourNumbering,
                 bcc: DynamicBCC | None = None) -> None:
@@ -385,9 +414,10 @@ class FleetQuerySession:
         self.tables = build_fleet_tables(tn, n_jumps=self.n_jumps)
         self.bcc = bcc
         self.versions = np.asarray(fleet.version, np.int64).copy()
-        self.builds += 1
-        self.build_syncs_total += np.asarray(self.tables.build_syncs,
-                                             np.int64)
+        build_syncs = np.asarray(self.tables.build_syncs, np.int64)
+        for s in range(len(self.labels)):
+            self._bump(self.labels[s], builds=1,
+                       build_syncs_total=int(build_syncs[s]))
 
     def is_fresh(self, fleet: ForestFleet, t: int) -> bool:
         return int(fleet.version[t]) == int(self.versions[t])
@@ -397,14 +427,14 @@ class FleetQuerySession:
             return
         policy = self.policies[t]
         if policy == "stale":
-            self.stale_served[t] += 1
+            self._bump(self.labels[t], stale_served=1)
             return
         if policy == "strict":
             raise StaleQueryError(
                 f"tenant {t} at version {int(fleet.version[t])}, session "
                 f"slice stamped {int(self.versions[t])}: refresh the "
                 "fleet caches first (or use policy='refresh' / 'stale')")
-        self.auto_refreshes[t] += 1
+        self._bump(self.labels[t], auto_refreshes=1)
         self.rebuild_tenant(fleet, t)
 
     # -- per-tenant query ops (gathers over one slice of the stack) ----------
@@ -453,14 +483,23 @@ class FleetQuerySession:
 
     # -- telemetry -----------------------------------------------------------
 
-    def sync_stats(self, t: int | None = None) -> dict:
-        """§12 amortization counters — one tenant's, or fleet totals."""
-        pick = (lambda a: int(a[t])) if t is not None else \
-            (lambda a: int(a.sum()))
-        return {"builds": pick(self.builds),
-                "build_syncs_total": pick(self.build_syncs_total),
-                "stale_served": pick(self.stale_served),
-                "auto_refreshes": pick(self.auto_refreshes)}
+    def sync_stats(self, t=None) -> dict:
+        """§12 amortization counters — one tenant's, or fleet totals.
+
+        ``t`` is a stable tenant label; a slot index also resolves (via
+        ``labels``) when no tenant carries that exact label, so PR-8
+        slot-indexed callers read the same numbers as before.
+        """
+        keys = ("builds", "build_syncs_total", "stale_served",
+                "auto_refreshes")
+        if t is None:
+            return {k: sum(c[k] for c in self.stats.values())
+                    for k in keys}
+        if t not in self.stats and isinstance(t, int) \
+                and 0 <= t < len(self.labels):
+            t = self.labels[t]
+        c = self.stats.get(t, collections.Counter())
+        return {k: int(c[k]) for k in keys}
 
 
 # -- host-side dispatch + admission -------------------------------------------
@@ -530,29 +569,77 @@ class FleetDispatcher:
         return ((jnp.asarray(ins_u), jnp.asarray(ins_v),
                  jnp.asarray(del_u), jnp.asarray(del_v)), served)
 
+    def drain(self, tenant_at: Sequence[Any], max_blocks: int = 1):
+        """Cross-tick carryover: up to ``max_blocks`` tick blocks in one
+        serving tick, so a bursty tenant's queued backlog drains at
+        ``max_blocks`` units/tick instead of silently waiting one tick
+        per unit. Each block is a plain ``tick`` — at most one unit per
+        tenant per block, FIFO, units never split or merged — so the
+        applied sequence is exactly the offered sequence (the atomicity
+        contract), just on a faster clock.
+
+        Returns a list of ``(block, served)`` pairs; empty when no
+        resident tenant has queued units.
+        """
+        out = []
+        for _ in range(max(1, int(max_blocks))):
+            if not any(tenant is not None and self.queues[tenant]
+                       for tenant in tenant_at):
+                break
+            out.append(self.tick(tenant_at))
+        return out
+
+    def backlog(self) -> dict:
+        """{tenant: queued units} for tenants with a non-empty queue —
+        the carryover pressure signal (reported per bucket in §15)."""
+        return {t: len(q) for t, q in self.queues.items() if q}
+
 
 class FleetManager:
     """Session admission/eviction against the fleet's slot capacity.
 
     Host-side bookkeeping around a ``ForestFleet``: which tenant lives
     in which slot, LRU order, and per-tenant stream cursors. When every
-    slot is occupied, ``ensure`` evicts the least-recently-used resident
-    through the §8 checkpoint path (forest + cursor, atomic publish);
-    re-admission restores bit-identically — eviction is invisible to the
-    tenant's replayed history (regression-tested).
+    slot is occupied, ``ensure`` evicts a resident through the §8
+    checkpoint path (forest + cursor, atomic publish); re-admission
+    restores bit-identically — eviction is invisible to the tenant's
+    replayed history (regression-tested).
+
+    Victim choice prefers IDLE least-recently-used residents: evicting a
+    tenant that still has pending dispatcher units round-trips a
+    checkpoint for nothing (it must be restored before its very next
+    tick). Pass ``busy`` (tenant → bool) to ``ensure``/``adopt_ready``;
+    when every resident is busy the global LRU resident is evicted
+    anyway — liveness over thrash-avoidance. Omitting ``busy``
+    reproduces PR 8's plain global-LRU behavior exactly.
+
+    Async admission (§15): ``prefetch`` starts the checkpoint restore on
+    a host worker thread while the device runs the current tick;
+    ``adopt_ready`` — called at a tick BOUNDARY — installs completed
+    restores. A restore finishing mid-tick is never observed early.
+    ``schema`` (optional ``FleetSchema``) is stamped into eviction
+    manifests and validated on restore, so a tenant checkpointed under
+    one bucket schema can't be silently adopted into another.
     """
 
-    def __init__(self, fleet: ForestFleet, ckpt_dir: str | pathlib.Path):
+    def __init__(self, fleet: ForestFleet, ckpt_dir: str | pathlib.Path,
+                 *, schema: "FleetSchema | None" = None,
+                 executor: concurrent.futures.Executor | None = None):
         self.fleet = fleet
         self.ckpt_dir = pathlib.Path(ckpt_dir)
+        self.schema = schema
         self.slot_of: dict[Any, int] = {}
         self.tenant_at: list[Any] = [None] * fleet.n_slots
         self.last_used = [-1] * fleet.n_slots
         self.clock = 0
         self.cursors = collections.Counter()   # tenant → applied batches
+        self.seeds: dict[Any, DynamicForest] = {}  # first-admission state
         self.admissions = 0
         self.evictions = 0
         self.restores = 0
+        self.prefetches = 0
+        self._executor = executor
+        self._prefetch: dict[Any, concurrent.futures.Future] = {}
 
     def _tenant_dir(self, tenant) -> pathlib.Path:
         return self.ckpt_dir / f"tenant_{tenant}"
@@ -561,53 +648,508 @@ class FleetManager:
         self.clock += 1
         self.last_used[self.slot_of[tenant]] = self.clock
 
-    def ensure(self, tenant) -> int:
-        """Make ``tenant`` resident; returns its slot (LRU-evicting if
-        the fleet is full)."""
-        if tenant in self.slot_of:
-            self.touch(tenant)
-            return self.slot_of[tenant]
+    def has_checkpoint(self, tenant) -> bool:
+        return ckpt.latest_step(self._tenant_dir(tenant)) is not None
+
+    def prefetching(self, tenant) -> bool:
+        return tenant in self._prefetch
+
+    def pick_victim(self, busy: Callable[[Any], bool] | None = None):
+        """The tenant ``evict`` would choose: idle LRU resident if one
+        exists, else the global LRU resident; ``None`` if no residents."""
+        residents = [s for s, occ in enumerate(self.tenant_at)
+                     if occ is not None]
+        if not residents:
+            return None
+        if busy is not None:
+            idle = [s for s in residents if not busy(self.tenant_at[s])]
+            if idle:
+                residents = idle
+        slot = min(residents, key=lambda s: self.last_used[s])
+        return self.tenant_at[slot]
+
+    def has_room(self, busy: Callable[[Any], bool] | None = None) -> bool:
+        """True when an admission would not evict a busy resident."""
+        if any(occ is None for occ in self.tenant_at):
+            return True
+        victim = self.pick_victim(busy)
+        return victim is not None and (busy is None or not busy(victim))
+
+    def _slot_for_admit(self,
+                        busy: Callable[[Any], bool] | None = None) -> int:
         free = [s for s, occupant in enumerate(self.tenant_at)
                 if occupant is None]
         if free:
-            slot = free[0]
-        else:
-            slot = min(range(len(self.last_used)),
-                       key=lambda s: self.last_used[s])
-            self.evict(self.tenant_at[slot])
+            return free[0]
+        self.evict(self.pick_victim(busy))
+        return [s for s, occ in enumerate(self.tenant_at)
+                if occ is None][0]
+
+    def ensure(self, tenant,
+               busy: Callable[[Any], bool] | None = None) -> int:
+        """Make ``tenant`` resident; returns its slot (evicting the
+        preferred victim — idle LRU first — if the fleet is full)."""
+        if tenant in self.slot_of:
+            self.touch(tenant)
+            return self.slot_of[tenant]
+        if tenant in self._prefetch:
+            # A prefetch is in flight: adopt it synchronously rather
+            # than racing a second restore against it.
+            forest, cursor = self._prefetch.pop(tenant).result()
+            slot = self._slot_for_admit(busy)
+            self._install(tenant, slot, forest, cursor=cursor,
+                          restored=True)
+            return slot
+        slot = self._slot_for_admit(busy)
         self._admit(tenant, slot)
         return slot
 
     def evict(self, tenant) -> None:
         """Checkpoint ``tenant``'s forest + cursor and free its slot."""
         slot = self.slot_of.pop(tenant)
+        extra = ({"schema": self.schema.to_dict()}
+                 if self.schema is not None else None)
         ckpt.save(self._tenant_dir(tenant),
                   {"forest": self.fleet.tenant(slot)},
                   step=self.clock, data_cursor=int(self.cursors[tenant]),
-                  keep=1)
+                  keep=1, extra=extra)
         self.fleet = self.fleet.clear_tenant(slot)
         self.tenant_at[slot] = None
         self.last_used[slot] = -1
         self.evictions += 1
 
-    def _admit(self, tenant, slot: int) -> None:
+    def _check_manifest(self, tenant, manifest) -> None:
+        saved = (manifest.get("extra") or {}).get("schema")
+        if saved is None or self.schema is None:
+            return
+        if saved != self.schema.to_dict():
+            raise ValueError(
+                f"tenant {tenant!r} checkpoint written under schema "
+                f"{saved} cannot be admitted into bucket schema "
+                f"{self.schema.to_dict()} — route it to its own bucket")
+
+    def _fresh_forest(self, tenant) -> DynamicForest:
+        seed = self.seeds.get(tenant)
+        if seed is not None:
+            return seed
+        return forest_empty(self.fleet.n_nodes, self.fleet.capacity)
+
+    def _restore(self, tenant):
+        """(worker-thread safe) load tenant's checkpoint → (forest,
+        cursor). Pure host work: file read + np decode."""
         fresh = {"forest": forest_empty(self.fleet.n_nodes,
                                         self.fleet.capacity)}
-        if ckpt.latest_step(self._tenant_dir(tenant)) is not None:
-            restored, manifest = ckpt.restore(self._tenant_dir(tenant),
-                                              fresh)
-            self.cursors[tenant] = int(manifest["data_cursor"])
-            forest = restored["forest"]
-            self.restores += 1
-        else:
-            forest = fresh["forest"]
+        restored, manifest = ckpt.restore(self._tenant_dir(tenant), fresh)
+        self._check_manifest(tenant, manifest)
+        return restored["forest"], int(manifest["data_cursor"])
+
+    def _install(self, tenant, slot: int, forest, *, cursor=None,
+                 restored: bool = False) -> None:
+        if cursor is not None:
+            self.cursors[tenant] = int(cursor)
         self.fleet = self.fleet.set_tenant(slot, forest)
         self.slot_of[tenant] = slot
         self.tenant_at[slot] = tenant
         self.admissions += 1
+        if restored:
+            self.restores += 1
         self.touch(tenant)
+
+    def _admit(self, tenant, slot: int) -> None:
+        if self.has_checkpoint(tenant):
+            forest, cursor = self._restore(tenant)
+            self._install(tenant, slot, forest, cursor=cursor,
+                          restored=True)
+        else:
+            self._install(tenant, slot, self._fresh_forest(tenant))
+
+    # -- async admission (§15) ----------------------------------------------
+
+    def prefetch(self, tenant) -> bool:
+        """Start restoring ``tenant`` on the host worker while the
+        current tick runs on device. No fleet state changes here — the
+        restored forest becomes visible only when ``adopt_ready`` runs
+        at a tick boundary. Returns True if a prefetch was started (or
+        is already in flight)."""
+        if tenant in self.slot_of:
+            return False
+        if tenant in self._prefetch:
+            return True
+        if self._executor is not None:
+            fut = self._executor.submit(self._restore, tenant)
+        else:
+            # No executor: run inline but STILL defer adoption to the
+            # next boundary — the protocol, minus the overlap.
+            fut = concurrent.futures.Future()
+            try:
+                fut.set_result(self._restore(tenant))
+            except Exception as e:          # surfaced at adopt time
+                fut.set_exception(e)
+        self._prefetch[tenant] = fut
+        self.prefetches += 1
+        return True
+
+    def adopt_ready(self,
+                    busy: Callable[[Any], bool] | None = None) -> list:
+        """Tick-boundary adoption: install every COMPLETED prefetch that
+        can take a slot (free, or by evicting the preferred victim).
+        Unfinished restores stay in flight; restores that finished
+        mid-tick land here, never earlier. Returns adopted tenants."""
+        adopted = []
+        for tenant in list(self._prefetch):
+            fut = self._prefetch[tenant]
+            if not fut.done():
+                continue
+            del self._prefetch[tenant]
+            forest, cursor = fut.result()   # re-raises restore errors
+            slot = self._slot_for_admit(busy)
+            self._install(tenant, slot, forest, cursor=cursor,
+                          restored=True)
+            adopted.append(tenant)
+        return adopted
 
     def note_applied(self, served: dict) -> None:
         """Advance stream cursors after a tick (one unit per tenant)."""
         for tenant in served:
             self.cursors[tenant] += 1
+
+
+# -- shape-bucketed sub-fleets (DESIGN.md §15) --------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class FleetSchema:
+    """A fleet shape class: every tenant in a bucket shares these.
+
+    ``ForestFleet`` vmaps all T tenants through ONE ``(n, capacity)``
+    schema, so ten thousand 64-node sessions pay the padding (and the
+    per-tick ``max_t(rounds)+1`` sync bill) of the single largest
+    tenant. A ``FleetSchema`` names one shape class; ``BucketedFleet``
+    routes each tenant to the sub-fleet whose schema it fits, so small
+    sessions never ride the largest tenant's padding.
+    """
+
+    n_nodes: int
+    capacity: int
+    batch: int
+
+    @property
+    def key(self) -> str:
+        return f"n{self.n_nodes}_c{self.capacity}_b{self.batch}"
+
+    @property
+    def slot_cost(self) -> int:
+        """Device rows one resident slot pins: 3 vertex-length arrays
+        (parent, rep, dirty) + 4 capacity-length pool arrays — the
+        memory proxy behind equal-budget bucketed-vs-single comparisons
+        (table9)."""
+        return 3 * self.n_nodes + 4 * self.capacity
+
+    def to_dict(self) -> dict:
+        return {"n_nodes": int(self.n_nodes),
+                "capacity": int(self.capacity), "batch": int(self.batch)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FleetSchema":
+        return cls(n_nodes=int(d["n_nodes"]), capacity=int(d["capacity"]),
+                   batch=int(d["batch"]))
+
+
+class FleetBucket:
+    """One sub-fleet: a ``ForestFleet`` + dispatcher + manager + caches,
+    all under a single ``FleetSchema``, ticking independently.
+
+    Each bucket pays its OWN per-tick sync bill (``max over its lanes``
+    + 1) with its own ``(T_b, B_b)`` block shape and its own refresh
+    cadence; a converged or small bucket never waits on a large one.
+    ``tick`` is the whole serving step for the bucket:
+
+      1. tick boundary — adopt prefetched restores that completed during
+         the previous tick (``FleetManager.adopt_ready``; a restore
+         finishing mid-tick is never observed early);
+      2. admission — waiting tenants with traffic claim free slots
+         (idle-LRU eviction when full); tenants with a checkpoint start
+         an async ``prefetch`` instead of blocking the device;
+      3. apply — up to ``max_drain`` dispatcher blocks (cross-tick
+         carryover for bursty tenants), each one vmapped
+         ``apply_batches`` labeled with the bucket name;
+      4. cadenced refresh — vmapped tour/BCC (+ optional query session)
+         on the bucket's own ``CadencePolicy``. Any residency change
+         since the last refresh forces a full (non-incremental) rebuild:
+         a rotated lane's cached numbering describes the slot's PREVIOUS
+         occupant.
+    """
+
+    def __init__(self, schema: FleetSchema, n_slots: int,
+                 ckpt_dir: str | pathlib.Path, *,
+                 cadence: CadencePolicy | None = None,
+                 name: str | None = None, use_kernel: bool = False,
+                 max_drain: int = 1,
+                 executor: concurrent.futures.Executor | None = None):
+        self.schema = schema
+        self.name = name or schema.key
+        self.cadence = cadence or CadencePolicy()
+        self.use_kernel = use_kernel
+        self.max_drain = max(1, int(max_drain))
+        self.manager = FleetManager(
+            fleet_empty(n_slots, schema.n_nodes, schema.capacity),
+            pathlib.Path(ckpt_dir) / self.name, schema=schema,
+            executor=executor)
+        self.dispatcher = FleetDispatcher(schema.n_nodes, schema.batch)
+        self.tenants: list = []
+        self.tn: TourNumbering | None = None
+        self.bcc: DynamicBCC | None = None
+        self.session: FleetQuerySession | None = None
+        self.ticks = 0            # ticks that applied at least one block
+        self.blocks = 0
+        self.sync_apply = 0
+        self.sync_refresh = 0
+        self.applied = collections.Counter()   # tenant → applied events
+        self.padded_events = 0    # Σ blocks · T_b · B_b (slot-rows fed)
+        self.padded_rows = 0      # Σ blocks · T_b · slot_cost (memory·ticks)
+        self.max_backlog = 0
+        self._lanes_dirty = True  # residency changed since last refresh
+
+    # -- routing -------------------------------------------------------------
+
+    def route(self, tenant, seed: DynamicForest | None = None) -> None:
+        """Register ``tenant`` in this bucket. ``seed`` (optional) is
+        the forest its FIRST admission installs — e.g. a pre-built
+        initial graph state — instead of an edgeless forest; later
+        admissions restore from its eviction checkpoint as usual."""
+        if tenant in self.tenants:
+            return
+        self.tenants.append(tenant)
+        if seed is not None:
+            if (seed.n_nodes != self.schema.n_nodes
+                    or seed.capacity != self.schema.capacity):
+                raise ValueError(
+                    f"seed forest (n={seed.n_nodes}, "
+                    f"capacity={seed.capacity}) does not fit bucket "
+                    f"schema {self.schema.key}")
+            self.manager.seeds[tenant] = seed
+
+    def offer(self, tenant, unit: StreamBatch) -> None:
+        if tenant not in self.tenants:
+            raise KeyError(f"tenant {tenant!r} not routed to bucket "
+                           f"{self.name}")
+        self.dispatcher.offer(tenant, unit)
+
+    def busy(self, tenant) -> bool:
+        return self.dispatcher.pending(tenant) > 0
+
+    def pending(self) -> int:
+        return self.dispatcher.pending() + len(self.manager._prefetch)
+
+    # -- the serving tick ----------------------------------------------------
+
+    def _admit_waiting(self) -> None:
+        mgr = self.manager
+        room = sum(1 for occ in mgr.tenant_at
+                   if occ is None or not self.busy(occ))
+        room -= len(mgr._prefetch)   # in-flight restores will claim room
+        for tenant in self.tenants:
+            if room <= 0:
+                break
+            if (not self.busy(tenant) or tenant in mgr.slot_of
+                    or mgr.prefetching(tenant)):
+                continue
+            if mgr.has_checkpoint(tenant):
+                mgr.prefetch(tenant)   # lands at the NEXT tick boundary
+            else:
+                mgr.ensure(tenant, busy=self.busy)
+                self._lanes_dirty = True
+            room -= 1
+
+    def tick(self, step: int | None = None) -> dict:
+        """One serving tick; returns {tenant: applied events}."""
+        mgr = self.manager
+        if mgr.adopt_ready(busy=self.busy):
+            self._lanes_dirty = True
+        self._admit_waiting()
+        served_total = collections.Counter()
+        with obs.span("bucket_tick", step=step, bucket=self.name):
+            for block, served in self.dispatcher.drain(
+                    mgr.tenant_at, max_blocks=self.max_drain):
+                mgr.fleet, stats = apply_batches(
+                    mgr.fleet, *block, use_kernel=self.use_kernel,
+                    bucket=self.name)
+                mgr.note_applied(served)
+                self.sync_apply += fleet_sync_cost(stats)
+                self.blocks += 1
+                self.padded_events += mgr.fleet.n_slots * self.schema.batch
+                self.padded_rows += mgr.fleet.n_slots * self.schema.slot_cost
+                for tenant, ev in served.items():
+                    served_total[tenant] += ev
+                    self.applied[tenant] += ev
+            if served_total:
+                if (self.cadence.tour != "off"
+                        and self.cadence.due(self.ticks)):
+                    self.refresh(step=step)
+                self.ticks += 1
+        backlog = self.dispatcher.backlog()
+        if backlog:
+            self.max_backlog = max(self.max_backlog,
+                                   max(backlog.values()))
+        return dict(served_total)
+
+    def refresh(self, step: int | None = None) -> None:
+        """Vmapped cache refresh for the whole bucket (bucket-labeled
+        ledger phases + span). Forced callers (end-of-run reporting)
+        call this directly, out of cadence."""
+        mgr, cad = self.manager, self.cadence
+        inc = not self._lanes_dirty
+        with obs.span("fleet_refresh", step=step, bucket=self.name), \
+                obs.SyncLedger() as led:
+            inc_t = cad.tour == "incremental" and self.tn is not None \
+                and inc
+            self.tn, mgr.fleet = refresh_tours(
+                mgr.fleet, self.tn if inc_t else None,
+                incremental=inc_t, use_kernel=self.use_kernel,
+                bucket=self.name)
+            if cad.bcc != "off":
+                inc_b = cad.bcc == "incremental" and self.bcc is not None \
+                    and inc
+                self.bcc = refresh_bccs(
+                    mgr.fleet, self.bcc if inc_b else None, tour=self.tn,
+                    incremental=inc_b, use_kernel=self.use_kernel,
+                    bucket=self.name)
+            if cad.queries:
+                if self.session is None:
+                    self.session = FleetQuerySession.from_fleet(
+                        mgr.fleet, self.tn, self.bcc,
+                        policy=cad.staleness, use_kernel=self.use_kernel,
+                        labels=[t if t is not None else s for s, t
+                                in enumerate(mgr.tenant_at)])
+                else:
+                    for s, tenant in enumerate(mgr.tenant_at):
+                        if tenant is not None:
+                            self.session.set_label(s, tenant)
+                    self.session.restamp(mgr.fleet, self.tn, self.bcc)
+        self.sync_refresh += led.total()
+        self._lanes_dirty = False
+
+    def slot(self, tenant) -> int:
+        """The tenant's resident slot (admitting it if needed)."""
+        return self.manager.ensure(tenant, busy=self.busy)
+
+
+class BucketedFleet:
+    """Shape-bucketed sub-fleets behind one serving surface (§15).
+
+    Tenants are routed by ``FleetSchema`` into ``FleetBucket``s; each
+    bucket ticks independently with its own block shape, cadence, and
+    sync bill. A ``BucketedFleet`` with exactly one bucket is PR 8's
+    single-schema fleet, bit-identically (regression-tested) — the
+    refactor's compatibility anchor. All buckets share one host worker
+    thread for async admission restores.
+    """
+
+    def __init__(self, ckpt_dir: str | pathlib.Path, *,
+                 use_kernel: bool = False, max_drain: int = 1):
+        self.ckpt_dir = pathlib.Path(ckpt_dir)
+        self.use_kernel = use_kernel
+        self.max_drain = max_drain
+        self.buckets: dict[str, FleetBucket] = {}
+        self._bucket_of: dict[Any, str] = {}
+        self._executor = concurrent.futures.ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="fleet-admit")
+
+    def add_bucket(self, schema: FleetSchema, n_slots: int, *,
+                   cadence: CadencePolicy | None = None,
+                   name: str | None = None,
+                   max_drain: int | None = None) -> FleetBucket:
+        name = name or schema.key
+        if name in self.buckets:
+            raise ValueError(f"bucket {name!r} already exists")
+        b = FleetBucket(schema, n_slots, self.ckpt_dir, cadence=cadence,
+                        name=name, use_kernel=self.use_kernel,
+                        max_drain=(self.max_drain if max_drain is None
+                                   else max_drain),
+                        executor=self._executor)
+        self.buckets[name] = b
+        return b
+
+    def route(self, tenant, schema: FleetSchema, *,
+              seed: DynamicForest | None = None) -> FleetBucket:
+        """Bind ``tenant`` to the bucket matching ``schema`` exactly."""
+        if tenant in self._bucket_of:
+            b = self.buckets[self._bucket_of[tenant]]
+            if b.schema != schema:
+                raise ValueError(
+                    f"tenant {tenant!r} already routed to bucket "
+                    f"{b.name} ({b.schema.key}); cannot re-route to "
+                    f"{schema.key}")
+            return b
+        for b in self.buckets.values():
+            if b.schema == schema:
+                b.route(tenant, seed=seed)
+                self._bucket_of[tenant] = b.name
+                return b
+        raise KeyError(f"no bucket with schema {schema.key} — "
+                       f"add_bucket first (have: "
+                       f"{', '.join(self.buckets) or 'none'})")
+
+    def bucket_of(self, tenant) -> FleetBucket:
+        return self.buckets[self._bucket_of[tenant]]
+
+    def offer(self, tenant, unit: StreamBatch) -> None:
+        self.bucket_of(tenant).offer(tenant, unit)
+
+    def pending(self) -> int:
+        return sum(b.pending() for b in self.buckets.values())
+
+    def step(self, step: int | None = None) -> dict:
+        """One serving tick: every bucket with traffic ticks once."""
+        served: dict = {}
+        for b in self.buckets.values():
+            if b.pending():
+                served.update(b.tick(step))
+        return served
+
+    def run(self, max_steps: int = 1_000_000) -> int:
+        """Drain every queue; returns the number of steps taken."""
+        steps = 0
+        while self.pending():
+            if steps >= max_steps:
+                raise RuntimeError(
+                    f"BucketedFleet.run did not drain in {max_steps} "
+                    "steps — admission livelock?")
+            self.step(steps)
+            steps += 1
+        return steps
+
+    def finalize(self) -> None:
+        """Force a final refresh in every bucket that applied work."""
+        for b in self.buckets.values():
+            if b.blocks:
+                b.refresh()
+
+    def tenant_forest(self, tenant) -> DynamicForest:
+        """Tenant's current forest (re-admitting it if evicted)."""
+        b = self.bucket_of(tenant)
+        slot = b.slot(tenant)          # may evict + restore, swaps fleet
+        return b.manager.fleet.tenant(slot)
+
+    # -- fleet-wide accounting ------------------------------------------------
+
+    def sync_total(self) -> int:
+        return sum(b.sync_apply + b.sync_refresh
+                   for b in self.buckets.values())
+
+    def applied_events(self) -> int:
+        return sum(sum(b.applied.values()) for b in self.buckets.values())
+
+    def padded_rows(self) -> int:
+        return sum(b.padded_rows for b in self.buckets.values())
+
+    def padded_events(self) -> int:
+        return sum(b.padded_events for b in self.buckets.values())
+
+    def close(self) -> None:
+        self._executor.shutdown(wait=True)
+
+    def __enter__(self) -> "BucketedFleet":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -275,12 +275,24 @@ class ServeConfig:
 
 
 @dataclasses.dataclass(frozen=True)
+class BucketSpec:
+    """One parsed ``--buckets`` entry: a shape class + its population."""
+
+    graph: str
+    tenants: int
+    slots: int
+    batch: int | None = None   # None → ServeConfig.stream.batch
+
+
+@dataclasses.dataclass(frozen=True)
 class FleetConfig:
-    """Multi-tenant knobs on top of ``ServeConfig`` (DESIGN.md §13)."""
+    """Multi-tenant knobs on top of ``ServeConfig`` (DESIGN.md §13, §15)."""
 
     tenants: int = 4
     slots: int = 4
     evict_dir: str | None = None
+    buckets: str = ""
+    drain: int = 1
 
     @staticmethod
     def add_args(ap: argparse.ArgumentParser) -> None:
@@ -293,13 +305,60 @@ class FleetConfig:
         g.add_argument("--evict-dir", default=FleetConfig.evict_dir,
                        help="checkpoint-on-evict directory (default: "
                             "a temp dir)")
+        g.add_argument("--buckets", default=FleetConfig.buckets,
+                       help="shape-bucketed sub-fleets (DESIGN.md §15): "
+                            "comma-separated graph:tenants[:slots[:batch]] "
+                            "specs, e.g. 'chain_64:12:4,rmat_9:2:2:32'. "
+                            "Graph names may be SUITE keys or "
+                            "chain_<n>/grid_<side>/rmat_<scale>/er_<n> "
+                            "patterns; batch defaults to --batch. "
+                            "Overrides --graph/--tenants/--slots.")
+        g.add_argument("--drain", type=int, default=FleetConfig.drain,
+                       help="max dispatcher blocks per serving tick "
+                            "(cross-tick carryover for bursty tenants; "
+                            "1 = PR-8 behavior)")
 
     @classmethod
     def from_args(cls, ns: argparse.Namespace) -> "FleetConfig":
         return cls(tenants=ns.tenants, slots=ns.slots,
-                   evict_dir=ns.evict_dir)
+                   evict_dir=ns.evict_dir, buckets=ns.buckets,
+                   drain=ns.drain)
 
     def check(self) -> "FleetConfig":
         if self.tenants < 1 or self.slots < 1:
             raise ValueError("--tenants and --slots must be >= 1")
+        if self.drain < 1:
+            raise ValueError("--drain must be >= 1")
+        if self.buckets:
+            self.bucket_specs()   # raises ValueError on a bad spec
         return self
+
+    def bucket_specs(self) -> tuple[BucketSpec, ...]:
+        """Parse ``--buckets`` into ``BucketSpec``s (empty when unset)."""
+        specs = []
+        for part in filter(None, (p.strip()
+                                  for p in self.buckets.split(","))):
+            fields = part.split(":")
+            if not 2 <= len(fields) <= 4:
+                raise ValueError(
+                    f"--buckets entry {part!r}: expected "
+                    "graph:tenants[:slots[:batch]]")
+            graph = fields[0]
+            try:
+                nums = [int(f) for f in fields[1:]]
+            except ValueError:
+                raise ValueError(
+                    f"--buckets entry {part!r}: tenants/slots/batch "
+                    "must be integers") from None
+            tenants = nums[0]
+            slots = nums[1] if len(nums) > 1 else tenants
+            batch = nums[2] if len(nums) > 2 else None
+            if tenants < 1 or slots < 1 or (batch is not None
+                                            and batch < 1):
+                raise ValueError(
+                    f"--buckets entry {part!r}: counts must be >= 1")
+            specs.append(BucketSpec(graph=graph, tenants=tenants,
+                                    slots=slots, batch=batch))
+        if self.buckets and not specs:
+            raise ValueError("--buckets was given but parsed to no specs")
+        return tuple(specs)

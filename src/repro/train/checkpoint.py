@@ -59,8 +59,15 @@ def _decode(raw: np.ndarray, dtype: str, shape) -> np.ndarray:
 
 
 def save(ckpt_dir: str | pathlib.Path, state, step: int, *,
-         data_cursor: int = 0, keep: int = 3, blocking: bool = True):
-    """Atomically write ``state`` as checkpoint ``step``."""
+         data_cursor: int = 0, keep: int = 3, blocking: bool = True,
+         extra: dict | None = None):
+    """Atomically write ``state`` as checkpoint ``step``.
+
+    ``extra`` is an optional msgpack-serializable dict stamped into the
+    manifest verbatim (e.g. the fleet schema a tenant was evicted under,
+    DESIGN.md §15); readers find it at ``manifest.get("extra", {})`` —
+    older checkpoints simply lack the key.
+    """
     ckpt_dir = pathlib.Path(ckpt_dir)
     ckpt_dir.mkdir(parents=True, exist_ok=True)
     names, leaves, _ = _flatten_with_names(state)
@@ -80,6 +87,8 @@ def save(ckpt_dir: str | pathlib.Path, state, step: int, *,
             "dtypes": [str(a.dtype) for a in host_leaves],
             "time": time.time(),
         }
+        if extra is not None:
+            manifest["extra"] = extra
         (tmp / "manifest.msgpack").write_bytes(
             msgpack.packb(manifest, use_bin_type=True))
         final = ckpt_dir / f"step_{step:010d}"

@@ -1,0 +1,480 @@
+"""Shape-bucketed sub-fleets (DESIGN.md §15): routing bit-equality vs
+independent single-tenant loops, the single-bucket == PR-8 ForestFleet
+compatibility anchor, async-admission adoption boundaries, idle-LRU
+eviction, stable-label telemetry continuity, dispatcher carryover,
+schema-stamped checkpoints, and the ``--buckets`` CLI spec surface."""
+import concurrent.futures
+
+import numpy as np
+import pytest
+from numpy.testing import assert_array_equal
+
+from repro.core import queries as q
+from repro.core.queries import build_tables
+from repro.data import graphs as G
+from repro.data.graphs import resolve_graph
+from repro.data.streams import STREAMS, StreamBatch
+from repro.dynamic.bcc import refresh_bcc
+from repro.dynamic.fleet import (BucketedFleet, FleetDispatcher,
+                                 FleetManager, FleetQuerySession,
+                                 FleetSchema, apply_batches, fleet_empty,
+                                 fleet_sync_cost, refresh_tours,
+                                 tenant_slice)
+from repro.dynamic.forest import forest_empty
+from repro.dynamic.replay import init_state, replay_batch, stream_capacity
+from repro.dynamic.tour import refresh_tour
+from repro.dynamic.view import CadencePolicy
+from repro.launch.config import BucketSpec, FleetConfig
+
+_FOREST_FIELDS = ("parent", "rep", "pool_src", "pool_dst", "pool_valid",
+                  "tree_mask")
+
+
+def _group(graph, tenants, stream_name, batch, n_units=3, seed0=0):
+    kw = {"batch": batch}
+    if stream_name == "sliding_window":
+        kw["window"] = 2
+    if stream_name == "churn":
+        kw["n_batches"] = n_units
+    streams = [STREAMS[stream_name](graph, **{**kw, "seed": seed0 + t})
+               for t in range(tenants)]
+    units = min(n_units, min(len(s.batches) for s in streams))
+    capacity = max(stream_capacity(s) for s in streams)
+    return streams, units, FleetSchema(graph.n_nodes, capacity, batch)
+
+
+def _oracle(stream, capacity, units):
+    state = init_state(stream, capacity=capacity)
+    for i in range(units):
+        state, _ = replay_batch(state, stream.batches[i])
+    return state
+
+
+def _assert_forest_fields(got, want, fields=_FOREST_FIELDS, tag=""):
+    for field in fields:
+        assert_array_equal(np.asarray(getattr(got, field)),
+                           np.asarray(getattr(want, field)),
+                           err_msg=f"{tag}: field {field}")
+
+
+def _assert_tree_equal(stacked, t, single, tag=""):
+    import jax
+    a = jax.tree_util.tree_leaves(tenant_slice(stacked, t))
+    b = jax.tree_util.tree_leaves(single)
+    assert len(a) == len(b)
+    for i, (x, y) in enumerate(zip(a, b)):
+        assert_array_equal(np.asarray(x), np.asarray(y),
+                           err_msg=f"{tag}: leaf {i}")
+
+
+# -- routing bit-equality (the tentpole invariant) ----------------------------
+
+@pytest.mark.parametrize("stream_name", sorted(STREAMS))
+def test_bucketed_matches_independent_loops(stream_name, tmp_path):
+    """Tenants across 2 shape buckets (one under eviction pressure) end
+    bit-identical — forests, and on the stable bucket tours, BCC labels,
+    and query answers — to independent single-tenant replay loops."""
+    ga, gb = G.grid2d(4), G.chain(32)
+    sa, units_a, schema_a = _group(ga, 3, stream_name, batch=8, seed0=0)
+    sb, units_b, schema_b = _group(gb, 2, stream_name, batch=16, seed0=7)
+
+    bf = BucketedFleet(tmp_path)
+    # Bucket A: 3 tenants in 2 slots — rotation, checkpoints, prefetch.
+    bf.add_bucket(schema_a, 2, name="a",
+                  cadence=CadencePolicy(tour="incremental", every=2))
+    # Bucket B: slots == tenants — stable lanes for cache comparisons.
+    bf.add_bucket(schema_b, 2, name="b",
+                  cadence=CadencePolicy(tour="incremental", bcc="full",
+                                        every=2, queries=True,
+                                        staleness="strict"))
+    for name, schema, streams, units in (("a", schema_a, sa, units_a),
+                                         ("b", schema_b, sb, units_b)):
+        for j, s in enumerate(streams):
+            tid = f"{name}{j}"
+            bf.route(tid, schema,
+                     seed=init_state(s, capacity=schema.capacity))
+            for unit in s.batches[:units]:
+                bf.offer(tid, unit)
+    bf.run()
+    bf.finalize()
+
+    # Forests: every tenant, both buckets, vs its own replay loop.
+    for name, schema, streams, units in (("a", schema_a, sa, units_a),
+                                         ("b", schema_b, sb, units_b)):
+        for j, s in enumerate(streams):
+            want = _oracle(s, schema.capacity, units)
+            got = bf.tenant_forest(f"{name}{j}")
+            _assert_forest_fields(got, want,
+                                  tag=f"{stream_name}/{name}{j}")
+
+    # Bucket A saw admission pressure (3 tenants, 2 slots).
+    assert bf.buckets["a"].manager.evictions > 0
+
+    # Derived caches + query answers on the stable bucket: the bucket's
+    # vmapped tn/bcc/session lanes == from-scratch single-tenant oracles.
+    bb = bf.buckets["b"]
+    assert bb.tn is not None and bb.bcc is not None
+    assert bb.session is not None
+    for j, s in enumerate(sb):
+        tid = f"b{j}"
+        slot = bb.manager.slot_of[tid]
+        state = _oracle(s, schema_b.capacity, units_b)
+        tn, state = refresh_tour(state, None)
+        bcc = refresh_bcc(state, tour=tn, incremental=False)
+        _assert_tree_equal(bb.tn, slot, tn, f"{stream_name}/{tid}/tour")
+        _assert_tree_equal(bb.bcc, slot, bcc, f"{stream_name}/{tid}/bcc")
+
+        tab = build_tables(tn)
+        rng = np.random.default_rng(11 * (j + 1))
+        u = rng.integers(0, gb.n_nodes, 32).astype(np.int32)
+        v = rng.integers(0, gb.n_nodes, 32).astype(np.int32)
+        fleet = bb.manager.fleet
+        assert_array_equal(
+            np.asarray(bb.session.connected(fleet, slot, u, v)),
+            np.asarray(q.connected(tab, u, v)))
+        assert_array_equal(
+            np.asarray(bb.session.lca(fleet, slot, u, v)),
+            np.asarray(q.lca(tab, u, v)))
+        # Telemetry rode the stable tenant id, not the slot index.
+        assert bb.session.sync_stats(tid)["builds"] >= 1
+
+
+def test_single_bucket_matches_pr8_forestfleet(tmp_path):
+    """The compatibility anchor: one bucket, slots == tenants, is the
+    PR-8 single-schema ForestFleet loop bit for bit — forests, tour
+    numbering, and the per-tick sync bill."""
+    g = G.grid2d(8)
+    streams, units, schema = _group(g, 3, "churn", batch=16, n_units=4)
+    cadence = CadencePolicy(tour="incremental", every=2)
+
+    # PR-8 style manual loop.
+    fleet = fleet_empty(3, g.n_nodes, schema.capacity)
+    for t, s in enumerate(streams):
+        fleet = fleet.set_tenant(t, init_state(s,
+                                               capacity=schema.capacity))
+    tn = None
+    sync = 0
+    for i in range(units):
+        block = tuple(np.stack([np.asarray(getattr(s.batches[i], f))
+                                for s in streams])
+                      for f in ("ins_u", "ins_v", "del_u", "del_v"))
+        fleet, stats = apply_batches(fleet, *block)
+        sync += fleet_sync_cost(stats)
+        if cadence.due(i):
+            tn, fleet = refresh_tours(
+                fleet, tn, incremental=(tn is not None))
+    tn, fleet = refresh_tours(fleet, tn, incremental=True)
+
+    bf = BucketedFleet(tmp_path)
+    b = bf.add_bucket(schema, 3, cadence=cadence, name="only")
+    for t, s in enumerate(streams):
+        bf.route(t, schema, seed=init_state(s, capacity=schema.capacity))
+        for unit in s.batches[:units]:
+            bf.offer(t, unit)
+    bf.run()
+    b.refresh()
+
+    assert b.sync_apply == sync
+    for t in range(3):
+        slot = b.manager.slot_of[t]
+        _assert_forest_fields(
+            b.manager.fleet.tenant(slot), fleet.tenant(t),
+            fields=_FOREST_FIELDS + ("dirty", "version"), tag=f"t{t}")
+        _assert_tree_equal(b.tn, slot, tenant_slice(tn, t), f"t{t}/tour")
+
+
+# -- async admission (§15 adoption boundary) ----------------------------------
+
+def test_prefetch_adopts_only_at_boundary(tmp_path):
+    """A restore that has already COMPLETED is not observed until
+    ``adopt_ready`` runs at a tick boundary — even with no executor
+    (inline restore), and even across many busy mid-tick checks."""
+    mgr = FleetManager(fleet_empty(1, 16, 8), tmp_path,
+                       schema=FleetSchema(16, 8, 4))
+    mgr.ensure("a")
+    mgr.evict("a")
+    mgr.ensure("b")
+
+    assert mgr.prefetch("a") is True
+    assert mgr._prefetch["a"].done()        # restore finished "mid-tick"
+    assert "a" not in mgr.slot_of           # ...but not visible yet
+    assert mgr.prefetching("a")
+    assert mgr.prefetch("a") is True        # idempotent while in flight
+
+    adopted = mgr.adopt_ready()
+    assert adopted == ["a"]
+    assert mgr.slot_of["a"] == 0 and "b" not in mgr.slot_of
+    assert mgr.restores == 1 and mgr.prefetches == 1
+
+
+def test_prefetch_threaded_restore_and_unfinished_future(tmp_path):
+    """With a real worker thread the protocol is the same; an UNFINISHED
+    restore stays in flight across adopt_ready calls."""
+    with concurrent.futures.ThreadPoolExecutor(1) as ex:
+        mgr = FleetManager(fleet_empty(2, 16, 8), tmp_path, executor=ex)
+        mgr.ensure("a")
+        mgr.evict("a")
+        mgr.prefetch("a")
+        mgr._prefetch["a"].result()         # wait for the worker
+        assert "a" not in mgr.slot_of
+        # An unfinished future is skipped, not installed.
+        mgr._prefetch["slow"] = concurrent.futures.Future()
+        assert mgr.adopt_ready() == ["a"]
+        assert mgr.prefetching("slow")
+        del mgr._prefetch["slow"]
+
+    # prefetch on a resident tenant is a no-op.
+    assert mgr.prefetch("a") is False
+
+
+def test_ensure_joins_inflight_prefetch(tmp_path):
+    """ensure() during an in-flight prefetch adopts that restore instead
+    of racing a second one."""
+    mgr = FleetManager(fleet_empty(1, 16, 8), tmp_path)
+    mgr.ensure("a")
+    mgr.evict("a")
+    mgr.prefetch("a")
+    slot = mgr.ensure("a")
+    assert slot == 0 and not mgr.prefetching("a")
+    assert mgr.restores == 1
+
+
+# -- idle-LRU eviction (satellite: don't evict busy tenants) ------------------
+
+def test_pick_victim_prefers_idle_over_lru(tmp_path):
+    mgr = FleetManager(fleet_empty(3, 16, 8), tmp_path)
+    for t in ("a", "b", "c"):
+        mgr.ensure(t)
+    mgr.touch("b")
+    mgr.touch("c")                          # LRU order now a < b < c
+    busy = {"a": True, "b": False, "c": True}
+
+    # PR-8 regression: without busy info, plain global LRU.
+    assert mgr.pick_victim() == "a"
+    # Idle resident beats the busy global-LRU resident.
+    assert mgr.pick_victim(busy=lambda t: busy[t]) == "b"
+    # All busy → fall back to global LRU (liveness over thrash).
+    assert mgr.pick_victim(busy=lambda t: True) == "a"
+    assert mgr.has_room(busy=lambda t: busy[t])
+    assert not mgr.has_room(busy=lambda t: True)
+
+    mgr.ensure("d", busy=lambda t: busy.get(t, False))
+    assert "b" not in mgr.slot_of           # the idle one was evicted
+    assert set(mgr.slot_of) == {"a", "c", "d"}
+
+
+def test_bucket_rotation_never_evicts_busy_when_idle_exists(tmp_path):
+    """Serving-loop regression: with queues offered up front, rotation
+    only ever evicts tenants whose queues have drained — no checkpoint
+    round-trips for still-busy residents."""
+    g = G.grid2d(4)
+    streams, units, schema = _group(g, 4, "churn", batch=8, n_units=2)
+    bf = BucketedFleet(tmp_path)
+    b = bf.add_bucket(schema, 2, name="only")
+    for t, s in enumerate(streams):
+        bf.route(t, schema, seed=init_state(s, capacity=schema.capacity))
+        for unit in s.batches[:units]:
+            bf.offer(t, unit)
+    bf.run()
+    assert b.manager.evictions > 0
+    # Idle-LRU policy: every evicted tenant was already drained, so its
+    # checkpoint never needed restoring.
+    assert b.manager.restores == 0
+
+
+# -- stable-label telemetry (satellite: counters survive rotation) ------------
+
+def test_session_labels_survive_rotation():
+    g = G.grid2d(4)
+    streams, _, schema = _group(g, 2, "churn", batch=8, n_units=3)
+    fleet = fleet_empty(2, g.n_nodes, schema.capacity)
+    for t, s in enumerate(streams):
+        fleet = fleet.set_tenant(t, init_state(s,
+                                               capacity=schema.capacity))
+    sess = FleetQuerySession.from_fleet(fleet, policy="stale",
+                                        labels=["a", "b"])
+    assert sess.sync_stats("a")["builds"] == 1
+
+    block = tuple(np.stack([np.asarray(getattr(s.batches[0], f))
+                            for s in streams])
+                  for f in ("ins_u", "ins_v", "del_u", "del_v"))
+    fleet, _ = apply_batches(fleet, *block)
+    u = np.arange(4, dtype=np.int32)
+    sess.connected(fleet, 0, u, u)          # stale lane, label "a"
+    assert sess.sync_stats("a")["stale_served"] == 1
+    assert sess.sync_stats("b")["stale_served"] == 0
+
+    # Rotation: slot 0 now hosts tenant "c"; its counters start fresh
+    # while "a" keeps its history.
+    sess.set_label(0, "c")
+    sess.rebuild_tenant(fleet, 0)
+    assert sess.sync_stats("c") == {"builds": 1, "build_syncs_total":
+                                    sess.sync_stats("c")
+                                    ["build_syncs_total"],
+                                    "stale_served": 0,
+                                    "auto_refreshes": 0}
+    assert sess.sync_stats("a")["stale_served"] == 1
+
+    # "a" re-admitted into the OTHER slot: counters continue, not reset.
+    sess.set_label(1, "a")
+    sess.rebuild_tenant(fleet, 1)
+    assert sess.sync_stats("a")["stale_served"] == 1
+    assert sess.sync_stats("a")["builds"] == 2
+    # Fleet totals sum labels; slot ints still resolve when unclaimed.
+    assert sess.sync_stats()["builds"] == \
+        sum(sess.sync_stats(t)["builds"] for t in ("a", "b", "c"))
+
+
+def test_session_default_labels_keep_pr8_slot_indexing():
+    g = G.grid2d(4)
+    streams, _, schema = _group(g, 2, "churn", batch=8, n_units=2)
+    fleet = fleet_empty(2, g.n_nodes, schema.capacity)
+    for t, s in enumerate(streams):
+        fleet = fleet.set_tenant(t, init_state(s,
+                                               capacity=schema.capacity))
+    sess = FleetQuerySession.from_fleet(fleet, policy="stale")
+    assert sess.labels == [0, 1]
+    assert sess.sync_stats(0)["builds"] == 1
+    with pytest.raises(ValueError, match="labels"):
+        FleetQuerySession.from_fleet(fleet, labels=["only-one"])
+
+
+# -- dispatcher carryover (satellite: cross-tick coalescing) ------------------
+
+def test_dispatcher_drain_carryover_fifo_and_backlog():
+    n, width = 16, 4
+    d = FleetDispatcher(n, width)
+    mk = lambda lo: StreamBatch(
+        ins_u=np.arange(lo, lo + width, dtype=np.int32) % n,
+        ins_v=(np.arange(lo, lo + width, dtype=np.int32) + 1) % n,
+        del_u=np.full(width, n, np.int32),
+        del_v=np.full(width, n, np.int32))
+    units_a = [mk(0), mk(4), mk(8)]
+    for u in units_a:
+        d.offer("a", u)
+    d.offer("b", mk(12))
+
+    blocks = d.drain(["a", "b"], max_blocks=2)
+    assert len(blocks) == 2
+    (iu0, _, _, _), served0 = blocks[0]
+    (iu1, _, _, _), served1 = blocks[1]
+    # Block 1: one unit per tenant (atomic, never merged)...
+    assert set(served0) == {"a", "b"}
+    assert_array_equal(np.asarray(iu0[0]), units_a[0].ins_u)
+    # ...block 2 carries a's backlog forward in FIFO order; b's empty
+    # slot rides as sentinels.
+    assert set(served1) == {"a"}
+    assert_array_equal(np.asarray(iu1[0]), units_a[1].ins_u)
+    assert np.all(np.asarray(iu1[1]) == n)
+    assert d.backlog() == {"a": 1}
+    # Drain stops early when no resident has queued units.
+    assert len(d.drain(["a", "b"], max_blocks=5)) == 1
+    assert d.backlog() == {}
+
+
+# -- schema-stamped checkpoints -----------------------------------------------
+
+def test_checkpoint_schema_mismatch_rejected(tmp_path):
+    s1 = FleetSchema(16, 8, 4)
+    s2 = FleetSchema(16, 8, 8)              # same arrays, different block
+    m1 = FleetManager(fleet_empty(1, 16, 8), tmp_path, schema=s1)
+    m1.ensure("x")
+    m1.evict("x")
+
+    m2 = FleetManager(fleet_empty(1, 16, 8), tmp_path, schema=s2)
+    with pytest.raises(ValueError, match="cannot be admitted"):
+        m2.ensure("x")
+    # Same schema (fresh manager) restores fine.
+    m3 = FleetManager(fleet_empty(1, 16, 8), tmp_path, schema=s1)
+    m3.ensure("x")
+    assert m3.restores == 1
+    # PR-8 managers (no schema) ignore the stamp entirely.
+    m4 = FleetManager(fleet_empty(1, 16, 8), tmp_path)
+    m4.ensure("x")
+    assert m4.restores == 1
+
+
+def test_bucketed_routing_contracts(tmp_path):
+    bf = BucketedFleet(tmp_path)
+    s1, s2 = FleetSchema(16, 8, 4), FleetSchema(32, 8, 4)
+    bf.add_bucket(s1, 1, name="small")
+    with pytest.raises(ValueError, match="already exists"):
+        bf.add_bucket(s1, 1, name="small")
+    with pytest.raises(KeyError, match="no bucket"):
+        bf.route("t", s2)
+    bf.add_bucket(s2, 1, name="big")
+    assert bf.route("t", s2).name == "big"
+    assert bf.route("t", s2).name == "big"  # idempotent re-route
+    with pytest.raises(ValueError, match="cannot re-route"):
+        bf.route("t", s1)
+    with pytest.raises(ValueError, match="does not fit"):
+        bf.buckets["small"].route("u", seed=forest_empty(32, 8))
+    with pytest.raises(KeyError, match="not routed"):
+        bf.buckets["small"].offer("ghost", StreamBatch(
+            ins_u=np.full(4, 16, np.int32), ins_v=np.full(4, 16, np.int32),
+            del_u=np.full(4, 16, np.int32), del_v=np.full(4, 16, np.int32)))
+    bf.close()
+
+
+def test_fleet_schema_contract():
+    s = FleetSchema(64, 40, 8)
+    assert s.key == "n64_c40_b8"
+    assert s.slot_cost == 3 * 64 + 4 * 40
+    assert FleetSchema.from_dict(s.to_dict()) == s
+
+
+# -- the --buckets CLI surface ------------------------------------------------
+
+def test_bucket_specs_parse_and_defaults():
+    fcfg = FleetConfig(buckets="chain_64:12,rmat_9:2:2:32, grid_8:3:1 ")
+    assert fcfg.bucket_specs() == (
+        BucketSpec("chain_64", 12, 12, None),
+        BucketSpec("rmat_9", 2, 2, 32),
+        BucketSpec("grid_8", 3, 1, None))
+    assert FleetConfig().bucket_specs() == ()
+    assert fcfg.check() is fcfg
+
+    for bad in ("chain_64", "chain_64:0", "g:1:2:3:4", "g:x",
+                "chain_64:2:0"):
+        with pytest.raises(ValueError):
+            FleetConfig(buckets=bad).bucket_specs()
+    with pytest.raises(ValueError):
+        FleetConfig(buckets="chain_64:0").check()
+    with pytest.raises(ValueError, match="--drain"):
+        FleetConfig(drain=0).check()
+
+
+def test_fleet_config_bucket_flags_bind():
+    import argparse
+    ap = argparse.ArgumentParser()
+    FleetConfig.add_args(ap)
+    fcfg = FleetConfig.from_args(ap.parse_args(
+        ["--buckets", "chain_16:4:2", "--drain", "3"]))
+    assert fcfg.buckets == "chain_16:4:2" and fcfg.drain == 3
+    assert FleetConfig.from_args(ap.parse_args([])) == FleetConfig()
+
+
+def test_resolve_graph_patterns():
+    assert resolve_graph("chain_32").n_nodes == 32
+    assert resolve_graph("grid_6").n_nodes == 36
+    assert resolve_graph("rmat_5").n_nodes == 32
+    assert resolve_graph("er_64").n_nodes == 64
+    assert resolve_graph("grid_64").n_nodes == 64 * 64   # SUITE name wins
+    for bad in ("mystery_7", "chain_x", "chain"):
+        with pytest.raises(ValueError, match="unknown graph"):
+            resolve_graph(bad)
+
+
+# -- the bucketed serving entry point -----------------------------------------
+
+def test_serve_fleet_bucketed_end_to_end(tmp_path, capsys):
+    from repro.launch import serve_fleet
+    serve_fleet.main(["--buckets", "chain_16:3:2,grid_4:2:2:16",
+                      "--stream", "churn", "--batch", "8", "--steps", "3",
+                      "--drain", "2", "--tour-every", "2",
+                      "--evict-dir", str(tmp_path), "--validate"])
+    out = capsys.readouterr().out
+    assert "bucket chain_16" in out and "bucket grid_4" in out
+    assert "sync accounting: total=" in out
+    assert out.count("partition==from-scratch: True") == 5
+    assert "Traceback" not in out
